@@ -1,0 +1,60 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark module exposes ``run(out_dir) -> dict`` (a JSON-able summary)
+and writes its full time-series artifacts under ``out_dir``.  ``main()`` in
+``benchmarks.run`` executes all of them and prints the summary table that
+EXPERIMENTS.md cites.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def out_path(out_dir: str, name: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    return os.path.join(out_dir, name)
+
+
+def dump_json(out_dir: str, name: str, payload: Any) -> str:
+    path = out_path(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+    return path
+
+
+def dump_csv(out_dir: str, name: str, header: list, rows) -> str:
+    path = out_path(out_dir, name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                             for v in row) + "\n")
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-able: {type(o)}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

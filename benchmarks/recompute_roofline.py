@@ -1,0 +1,37 @@
+"""Recompute the derived roofline fields of dry-run JSON records in place.
+
+The raw measurements (memory, FLOPs, collective bytes) come from the
+compile; the derived fields (roofline terms, MODEL_FLOPS, MFU) are pure
+functions of the record — this tool re-derives them after a fix to
+``roofline_terms`` without recompiling 64 cells.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.recompute_roofline results/*.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import SHAPES_BY_NAME
+from repro.launch.dryrun import roofline_terms
+
+
+def main() -> None:
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            records = json.load(f)
+        n = 0
+        for rec in records:
+            if "error" in rec or "shape" not in rec:
+                continue
+            rec.update(roofline_terms(rec, SHAPES_BY_NAME[rec["shape"]]))
+            n += 1
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"{path}: re-derived {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Render the EXPERIMENTS.md §Roofline tables and build dryrun_opt.json.
+
+Merges the per-layout sweeps (tp baseline, fsdp train/prefill, serve
+decode), picks the best layout per cell (minimum roofline-bound step time),
+writes ``results/dryrun_opt.json``, and prints the two markdown tables.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.render_tables
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import RESULTS_DIR
+
+ARCH_ORDER = [
+    "jamba-v0.1-52b", "qwen3-moe-30b-a3b", "grok-1-314b", "deepseek-67b",
+    "olmo-1b", "qwen2-72b", "qwen3-8b", "internvl2-1b", "xlstm-125m",
+    "seamless-m4t-medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(name):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [r for r in json.load(f) if "error" not in r]
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["mesh"])
+
+
+def fmt(x):
+    if x == 0:
+        return "0"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    if x >= 0.01:
+        return f"{x:.3f}"
+    return f"{x:.1e}"
+
+
+def table(rows, with_layout=False):
+    hdr = "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | dominant | useful | MFU bound |"
+    sep = "|---|---|---|---|---|---|---|---|---|"
+    if with_layout:
+        hdr += " layout |"
+        sep += "---|"
+    out = [hdr, sep]
+    for r in rows:
+        line = (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt(r['t_compute_s'])} | {fmt(r['t_memory_s'])} "
+            f"| {fmt(r['t_collective_s'])} | {r['dominant']} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r['model_flops_util']:.4f} |"
+        )
+        if with_layout:
+            line += f" {r.get('layout', 'tp')} |"
+        out.append(line)
+    return "\n".join(out)
+
+
+def sort_rows(rows):
+    return sorted(rows, key=lambda r: (
+        ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]), r["mesh"]
+    ))
+
+
+def main() -> None:
+    base = {key(r): r for r in load("dryrun_baseline.json")}
+    cand = {}
+    for r in load("dryrun_baseline.json"):
+        cand.setdefault(key(r), []).append(r)
+    for name in ("dryrun_fsdp.json", "dryrun_serve.json"):
+        for r in load(name):
+            cand.setdefault(key(r), []).append(r)
+
+    opt = []
+    for k, rows in cand.items():
+        best = min(rows, key=lambda r: r["roofline_step_s"])
+        opt.append(best)
+    opt = sort_rows(opt)
+    with open(os.path.join(RESULTS_DIR, "dryrun_opt.json"), "w") as f:
+        json.dump(opt, f, indent=1)
+
+    print("### Baseline (`tp`) — all cells\n")
+    print(table(sort_rows(list(base.values()))))
+    print("\n\n### Optimized (best layout per cell)\n")
+    print(table(opt, with_layout=True))
+
+    # summary stats
+    both = [(base[key(r)], r) for r in opt if key(r) in base]
+    speedups = [b["roofline_step_s"] / o["roofline_step_s"] for b, o in both]
+    import statistics
+
+    print(f"\ncells: {len(opt)}; median step-bound speedup "
+          f"{statistics.median(speedups):.2f}x; "
+          f"max {max(speedups):.1f}x; "
+          f"best MFU bound {max(r['model_flops_util'] for r in opt):.3f}")
+
+
+if __name__ == "__main__":
+    main()

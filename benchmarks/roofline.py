@@ -1,0 +1,98 @@
+"""Roofline reader: renders EXPERIMENTS.md §Roofline from the dry-run JSON.
+
+Reads ``results/dryrun_baseline.json`` (and, when present, the optimized
+records in ``results/dryrun_opt.json``) and prints per (arch x shape x mesh):
+compute / memory / collective terms in seconds, the dominant term, the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio, and the roofline-bound MFU.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import RESULTS_DIR, dump_json
+
+BASELINE = os.path.join(RESULTS_DIR, "dryrun_baseline.json")
+OPTIMIZED = os.path.join(RESULTS_DIR, "dryrun_opt.json")
+
+
+def load(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [r for r in json.load(f) if "error" not in r]
+
+
+def fmt_row(r: Dict) -> str:
+    return (
+        f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} "
+        f"{r['t_compute_s']:>9.3g} {r['t_memory_s']:>9.3g} "
+        f"{r['t_collective_s']:>9.3g} {r['dominant']:<10} "
+        f"{r['useful_flops_fraction']:>6.2f} {r['model_flops_util']:>7.4f}"
+    )
+
+
+HEADER = (
+    f"{'arch':<22} {'shape':<12} {'mesh':<8} "
+    f"{'t_comp(s)':>9} {'t_mem(s)':>9} {'t_coll(s)':>9} {'dominant':<10} "
+    f"{'useful':>6} {'MFU':>7}"
+)
+
+
+def run(out_dir: str) -> Dict:
+    base = load(BASELINE)
+    opt = load(OPTIMIZED)
+
+    print("\n--- Roofline (baseline dry-run) ---")
+    print(HEADER)
+    for r in base:
+        print(fmt_row(r))
+    if opt:
+        print("\n--- Roofline (optimized cells) ---")
+        print(HEADER)
+        for r in opt:
+            print(fmt_row(r))
+
+    dominant_counts: Dict[str, int] = {}
+    for r in base:
+        dominant_counts[r["dominant"]] = dominant_counts.get(
+            r["dominant"], 0) + 1
+
+    def best(rows, key):
+        return max(rows, key=lambda r: r.get(key, 0.0)) if rows else None
+
+    summary = {
+        "baseline_cells": len(base),
+        "optimized_cells": len(opt),
+        "dominant_term_histogram": dominant_counts,
+        "best_baseline_mfu": best(base, "model_flops_util")["model_flops_util"]
+        if base else 0.0,
+        "best_optimized_mfu": best(opt, "model_flops_util")["model_flops_util"]
+        if opt else 0.0,
+    }
+    if opt:
+        # before/after for the hillclimbed cells
+        improvements = []
+        for o in opt:
+            match = [
+                b for b in base
+                if (b["arch"], b["shape"], b["mesh"])
+                == (o["arch"], o["shape"], o["mesh"])
+            ]
+            if match:
+                b = match[0]
+                improvements.append(
+                    {
+                        "cell": f"{o['arch']} x {o['shape']} x {o['mesh']}",
+                        "bound_before_s": b["roofline_step_s"],
+                        "bound_after_s": o["roofline_step_s"],
+                        "speedup": b["roofline_step_s"] / o["roofline_step_s"],
+                        "mfu_before": b["model_flops_util"],
+                        "mfu_after": o["model_flops_util"],
+                    }
+                )
+        summary["hillclimb"] = improvements
+    dump_json(out_dir, "roofline_summary.json", summary)
+    return summary

@@ -1,0 +1,88 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §6) plus the framework
+benchmarks.  Each writes its artifacts to ``results/bench/`` and returns a
+JSON summary; the combined summary lands in ``results/bench/summary.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+from .common import RESULTS_DIR, dump_json, out_path
+
+MODULES = [
+    ("fig3_4", "benchmarks.fig3_4_synthetic_utilization"),
+    ("fig5", "benchmarks.fig5_synthetic_error"),
+    ("fig7_spark", "benchmarks.fig7_spark_baseline"),
+    ("fig8_9_10", "benchmarks.fig8_9_10_usecase"),
+    ("binpack_quality", "benchmarks.binpack_quality"),
+    ("binpack_microbench", "benchmarks.binpack_microbench"),
+    ("packing_throughput", "benchmarks.packing_throughput"),
+    ("serving_autoscale", "benchmarks.serving_autoscale"),
+    ("kernel_bench", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def _flat(d):
+    for k, v in d.items():
+        if isinstance(v, dict):
+            yield from _flat(v)
+        else:
+            yield k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or out_path(RESULTS_DIR, "bench")
+    selected = set(args.only.split(",")) if args.only else None
+
+    all_summaries = {}
+    failures = 0
+    for name, module in MODULES:
+        if selected and name not in selected:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(module)
+            summary = mod.run(out_dir)
+            dt = time.perf_counter() - t0
+            all_summaries[name] = summary
+            print(f"\n=== {name} ({dt:.1f}s) ===")
+            for k, v in summary.items():
+                if isinstance(v, dict):
+                    print(f"  {k}:")
+                    for kk, vv in v.items():
+                        print(f"    {kk}: {vv}")
+                else:
+                    print(f"  {k}: {v}")
+            bad = [k for k, v in _flat(summary)
+                   if k.startswith("claim") and v is False]
+            if bad:
+                print(f"  !! failed claims: {bad}")
+                failures += 1
+        except Exception as e:
+            failures += 1
+            all_summaries[name] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"\n=== {name} FAILED: {type(e).__name__}: {e} ===")
+            traceback.print_exc()
+
+    dump_json(out_dir, "summary.json", all_summaries)
+    n = len(all_summaries)
+    print(f"\n{n - failures}/{n} benchmarks passed all claims; "
+          f"artifacts in {out_dir}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

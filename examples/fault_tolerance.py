@@ -1,0 +1,130 @@
+"""Fault-tolerance walkthrough: checkpoint/restart, elastic resharding,
+worker failure in the streaming cluster, TTL requeue.
+
+Four scenarios, all runnable on one CPU:
+
+  1. training crash -> automatic restart from the latest async checkpoint,
+  2. elastic restore: the same checkpoint restored onto a different mesh
+     (device_put against the current topology's shardings),
+  3. a worker VM dying mid-stream: in-flight messages bounce back to the
+     master queue (at-least-once) and the workload still completes,
+  4. failed container placements TTL-requeueing through the container queue.
+
+Usage:
+  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import (
+    AllocationQueue,
+    ContainerQueue,
+    HostRequest,
+    SimConfig,
+    simulate,
+    usecase_workload,
+)
+from repro.distributed import param_shardings
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model, init_params, make_batch
+from repro.training import OptimizerConfig, init_opt_state, make_train_step
+from repro.training.controller import TrainController, TrainControllerConfig
+
+
+def scenario_1_crash_restart(tmp: str) -> None:
+    print("=" * 64)
+    print("1. Training crash -> restart from latest checkpoint")
+    print("=" * 64)
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, OptimizerConfig()))
+    ctl = TrainController(step_fn, TrainControllerConfig(
+        checkpoint_dir=tmp, checkpoint_every=5, async_checkpoint=True,
+    ))
+
+    def batches():
+        i = 0
+        while True:
+            yield make_batch(cfg, "train", 2, 64, seed=i)
+            i += 1
+
+    _, opt, summary = ctl.run(
+        params, init_opt_state(params), batches(),
+        num_steps=12, fail_at=8,
+    )
+    print(f"injected failure at step 8 -> restarts: {summary['restarts']}, "
+          f"completed step {summary['final_step']} anyway\n")
+
+
+def scenario_2_elastic_restore(tmp: str) -> None:
+    print("=" * 64)
+    print("2. Elastic restore onto the current mesh")
+    print("=" * 64)
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    specs = model.param_specs()
+    params = init_params(specs, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(tmp + "/elastic")
+    mgr.save(1, {"p": params})
+
+    mesh = make_local_mesh()  # whatever topology this host has
+    shardings = {"p": param_shardings(specs, mesh)}
+    restored = mgr.restore(1, {"p": params}, shardings)
+    leaf = jax.tree.leaves(restored["p"])[0]
+    print(f"restored onto mesh {dict(mesh.shape)}; "
+          f"first leaf sharding: {leaf.sharding}\n")
+
+
+def scenario_3_worker_failure() -> None:
+    print("=" * 64)
+    print("3. Worker VM failure mid-stream (messages requeued, run completes)")
+    print("=" * 64)
+    stream = usecase_workload(seed=0, n_images=80, duration_range=(4.0, 8.0))
+    res = simulate(stream, SimConfig(
+        dt=0.5, cores_per_worker=4, max_workers=5,
+        worker_boot_delay=5.0, pe_start_delay=1.0, t_max=1500.0,
+        fail_worker_at=(0, 25.0),  # kill the busiest worker at t=25s
+    ))
+    print(f"worker 0 killed at t=25s; completed {res.completed}/{res.total} "
+          f"in {res.makespan:.0f}s\n")
+
+
+def scenario_4_ttl_requeue() -> None:
+    print("=" * 64)
+    print("4. TTL requeue of failed placements (paper V-B.2)")
+    print("=" * 64)
+    cq, aq = ContainerQueue(), AllocationQueue()
+    req = HostRequest("haste/cellprofiler:3.1.9", size_estimate=0.4, ttl=3,
+                      target_worker=2)
+    aq.push(req)
+    attempts = []
+
+    def try_start(r):
+        attempts.append(r.ttl)
+        return len(attempts) >= 3  # worker becomes ready on the 3rd try
+
+    for _ in range(3):
+        aq.consume(try_start=try_start, on_fail=cq.requeue)
+        for r in cq.drain():
+            r.target_worker = 2
+            aq.push(r)
+        if not len(aq):
+            break
+    print(f"placement attempts (ttl at attempt): {attempts} -> started")
+    print(f"dropped requests: {len(cq.dropped)} (TTL never exhausted)\n")
+
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as tmp:
+        scenario_1_crash_restart(tmp)
+        scenario_2_elastic_restore(tmp)
+    scenario_3_worker_failure()
+    scenario_4_ttl_requeue()
+    print("Done.")

@@ -1,0 +1,134 @@
+"""End-to-end driver: stream -> First-Fit packing -> train a ~100M LM.
+
+The paper's full loop at trainable-on-CPU scale:
+
+  - documents stream in from a synthetic scientific-corpus source,
+  - the IRM-instrumented pipeline profiles document sizes, auto-scales
+    packer shards from queue pressure, and First-Fit-packs rows,
+  - a ~100M-parameter decoder (same code path as the assigned archs) trains
+    with the fault-tolerant controller: async checkpoints, automatic
+    restart, straggler tracking.
+
+Usage:
+  PYTHONPATH=src python examples/train_stream.py --steps 300
+  PYTHONPATH=src python examples/train_stream.py --steps 50 --fail-at 30
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import StreamingPipeline, synthetic_documents
+from repro.models import build_model, init_params
+from repro.training import OptimizerConfig, init_opt_state, make_train_step
+from repro.training.controller import TrainController, TrainControllerConfig
+
+# ~100M-parameter decoder-only LM (untied embeddings: 2*50304*640 = 64M,
+# blocks: 10 * (4*640^2 + 3*640*2560) = 66M  ->  ~130M total)
+LM_100M = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=10,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=10,
+    d_ff=2560,
+    vocab_size=50304,
+    norm_type="rmsnorm",
+    act="swiglu",
+    source="examples/train_stream.py",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (restart demo)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_stream")
+    args = ap.parse_args()
+
+    cfg = LM_100M
+    model = build_model(cfg)
+    n_params, _ = cfg.param_counts()
+    print(f"model: {cfg.name} ({n_params / 1e6:.0f}M params)")
+
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(
+        make_train_step(
+            model,
+            OptimizerConfig(learning_rate=3e-4, warmup_steps=50,
+                            decay_steps=args.steps),
+            remat_policy="nothing",
+        ),
+        donate_argnums=(0, 1),
+    )
+
+    docs = synthetic_documents(cfg.vocab_size, mean_len=180, max_len=1024,
+                               seed=0, limit=None)
+    pipe = StreamingPipeline(
+        docs, seq_len=args.seq_len, batch_size=args.batch_size, prefetch=4
+    )
+
+    def batches():
+        for pb in pipe:
+            yield {
+                "tokens": jnp.asarray(pb.tokens),
+                "labels": jnp.asarray(pb.labels),
+                "segment_ids": jnp.asarray(pb.segment_ids),
+                "positions": jnp.asarray(pb.positions),
+            }
+
+    ctl = TrainController(
+        step_fn,
+        TrainControllerConfig(
+            checkpoint_dir=args.ckpt_dir, checkpoint_every=50,
+            async_checkpoint=True,
+        ),
+    )
+    params, opt_state, start = ctl.init_state(lambda: (params, opt_state))
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+
+    t0 = time.perf_counter()
+    losses = []
+
+    def on_metrics(step, metrics):
+        losses.append(float(metrics["loss"]))
+        if step % 20 == 0 or step == start + 1:
+            dt = time.perf_counter() - t0
+            tput = (step - start) * args.batch_size * args.seq_len / dt
+            print(
+                f"step {step:>5}  loss {metrics['loss']:.4f}  "
+                f"grad_norm {metrics['grad_norm']:.3f}  "
+                f"lr {metrics['lr']:.2e}  {tput:,.0f} tok/s"
+            )
+
+    params, opt_state, summary = ctl.run(
+        params, opt_state, batches(),
+        num_steps=args.steps, start_step=start,
+        fail_at=args.fail_at, on_metrics=on_metrics,
+    )
+
+    stats = pipe.stats()
+    print("\n--- done ---")
+    print(f"final step: {summary['final_step']}  "
+          f"restarts: {summary['restarts']}  "
+          f"stragglers: {len(summary['stragglers'])}")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"pipeline: {stats['docs_in']} docs, {stats['rows_out']} rows, "
+          f"mean doc fill {stats['mean_doc_fill']:.2%}, "
+          f"packer shards {stats['active_shards']}")
+    if args.steps >= 100:  # shorter runs sit inside the lr warmup
+        assert losses[-1] < losses[0], "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""deepseek-67b — dense llama-arch GQA.  [arXiv:2401.02954; hf]"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102400,
+    norm_type="rmsnorm",
+    act="swiglu",
+    rope_theta=10000.0,
+    source="arXiv:2401.02954; hf",
+)

@@ -1,0 +1,126 @@
+"""Container allocator / bin-packing manager (paper Section V-B.2).
+
+Models the scheduling problem exactly as the paper does:
+
+  - a worker VM is a *bin* with capacity 1.0 (an active VM is an open bin,
+    pre-filled with the profiled usage of the PEs it already hosts),
+  - a container hosting request is an *item* with size in (0, 1] — the
+    profiled CPU usage of that PE's image,
+  - a packing run (at a configurable rate) maps queued requests to workers
+    and determines how many workers are needed.
+
+On top of the raw bin count, a small buffer of idle workers is kept ready to
+accept stream requests; the buffer is logarithmically proportional to the
+number of currently active workers (paper Section V-A), providing more
+headroom for fluctuations when the workload is not as high.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from .binpack import Bin, Item, lower_bound, make_packer
+from .queues import HostRequest
+
+__all__ = ["AllocatorConfig", "PackingRun", "BinPackingManager", "idle_buffer"]
+
+
+def idle_buffer(active_workers: int) -> int:
+    """Idle-worker headroom: ceil(log2(active + 1)) (log-proportional)."""
+    return int(math.ceil(math.log2(active_workers + 1))) if active_workers > 0 else 1
+
+
+@dataclasses.dataclass
+class AllocatorConfig:
+    # Any-Fit algorithm used for the packing run; First-Fit in the paper.
+    algorithm: str = "first-fit-tree"
+    # Bin capacity: 1.0 == 100% of a worker's CPU.
+    capacity: float = 1.0
+    # Rate of packing runs, seconds (paper: "at a configurable rate").
+    pack_interval: float = 2.0
+    # Keep a log-proportional idle-worker buffer (paper Section V-A).
+    keep_idle_buffer: bool = True
+    # Optional per-run cap on consumed requests (back-pressure guard).
+    max_requests_per_run: Optional[int] = None
+    # Optional per-worker headroom so measurement noise does not congest a
+    # worker scheduled at exactly 100% (0.0 == faithful paper behaviour).
+    headroom: float = 0.0
+
+
+@dataclasses.dataclass
+class PackingRun:
+    """Result of one periodic bin-packing run."""
+
+    t: float
+    placements: List[HostRequest]  # requests with ``target_worker`` attached
+    num_bins: int                  # bins used by this packing solution
+    target_workers: int            # num_bins + idle buffer
+    ideal_bins: int                # L1 lower bound for the packed load
+    scheduled_load: List[float]    # per-bin scheduled usage after the run
+
+
+class BinPackingManager:
+    """Periodic First-Fit packing of queued PEs onto workers."""
+
+    def __init__(self, config: Optional[AllocatorConfig] = None):
+        self.config = config or AllocatorConfig()
+        self._last_run_t: Optional[float] = None
+        self.runs: List[PackingRun] = []
+
+    def should_run(self, t: float) -> bool:
+        return (
+            self._last_run_t is None
+            or (t - self._last_run_t) >= self.config.pack_interval
+        )
+
+    def run(
+        self,
+        t: float,
+        requests: Sequence[HostRequest],
+        worker_loads: Sequence[float],
+    ) -> PackingRun:
+        """One packing run.
+
+        ``worker_loads[i]`` is the *scheduled* (profiled) usage of active
+        worker ``i`` — the sum of size estimates of the PEs it currently
+        hosts.  Active workers are open bins pre-filled to that level; queued
+        requests are packed in FIFO order; bins opened beyond the active
+        workers represent the scale-up the IRM will request.
+        """
+        cfg = self.config
+        self._last_run_t = t
+        cap = cfg.capacity - cfg.headroom
+        bins = [Bin(cfg.capacity, used=min(load, cfg.capacity)) for load in worker_loads]
+        try:
+            # algorithms that support pre-filled open bins (the Any-Fit group)
+            packer = make_packer(cfg.algorithm, capacity=cfg.capacity, bins=bins)
+        except TypeError:
+            raise ValueError(
+                f"algorithm {cfg.algorithm!r} does not support pre-filled bins; "
+                "use an Any-Fit algorithm for the IRM allocator"
+            ) from None
+
+        placements: List[HostRequest] = []
+        for req in requests:
+            size = min(max(req.size_estimate, 1e-3), cap)
+            idx = packer.pack_one(Item(size=size, tag=req.req_id))
+            req.target_worker = idx
+            placements.append(req)
+
+        used_bins = sum(1 for b in packer.bins if b.used > 1e-9)
+        total_load = sum(b.used for b in packer.bins)
+        ideal = lower_bound([total_load], cfg.capacity) if total_load > 0 else 0
+        target = used_bins + (idle_buffer(used_bins) if cfg.keep_idle_buffer else 0)
+
+        run = PackingRun(
+            t=t,
+            placements=placements,
+            num_bins=used_bins,
+            target_workers=target,
+            ideal_bins=ideal,
+            scheduled_load=[b.used for b in packer.bins],
+        )
+        self.runs.append(run)
+        return run

@@ -1,0 +1,497 @@
+"""Online bin-packing algorithms (paper Section IV).
+
+The paper bases its Intelligent Resource Manager on the *Any-Fit* family of
+online bin-packing algorithms (Epstein et al. [18]), in particular First-Fit:
+
+  - items ``a_i in (0, 1]`` arrive one by one (no knowledge of future items),
+  - bins have capacity 1.0 (a worker VM),
+  - a new bin is opened only when no active bin can fit the next item,
+  - First-Fit places each item into the *lowest-index* bin that fits and has
+    asymptotic performance ratio R = 1.7 with O(n log n) time / O(n) space.
+
+This module implements the Any-Fit family (First-, Best-, Worst-, Next-Fit),
+the offline First-Fit-Decreasing variant used as a quality reference, the
+Harmonic(M) algorithm the paper cites (Lee & Lee [20]), and — the paper's
+stated future-work direction — multi-dimensional *vector* bin-packing.
+
+Two First-Fit implementations are provided: a straightforward O(n·m) scan
+(``FirstFit``) and an O(n log m) segment-tree variant (``FirstFitTree``) that
+realizes the complexity bound quoted in the paper; they are equivalence-tested
+property-style in ``tests/test_binpack.py``.
+
+Everything here is plain Python on purpose: packing is control-flow-heavy,
+runs on the *host* (the master node in HarmonicIO terms), and its cost is
+microseconds per item (see ``benchmarks/binpack_microbench.py``) — it never
+belongs on the accelerator.  The JAX integration points (sequence packing,
+KV-page allocation, expert capacity) consume the *results* of these packers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+__all__ = [
+    "Item",
+    "Bin",
+    "PackResult",
+    "AnyFit",
+    "FirstFit",
+    "FirstFitTree",
+    "BestFit",
+    "WorstFit",
+    "NextFit",
+    "FirstFitDecreasing",
+    "Harmonic",
+    "VectorItem",
+    "VectorBin",
+    "VectorFirstFit",
+    "lower_bound",
+    "make_packer",
+    "ASYMPTOTIC_RATIO",
+]
+
+# Best performance ratio in the Any-Fit group (paper Sec. IV-A, [18]).
+ASYMPTOTIC_RATIO = {
+    "first-fit": 1.7,
+    "best-fit": 1.7,
+    "worst-fit": 2.0,
+    "next-fit": 2.0,
+}
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class Item:
+    """A bin-packing item: ``size`` in (0, 1] plus an opaque payload tag.
+
+    In the IRM the tag is a container host request; in the data pipeline it is
+    a document id; in the serving engine it is a request id.
+    """
+
+    size: float
+    tag: Any = None
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.size <= 1.0 + _EPS):
+            raise ValueError(f"item size must be in (0, 1], got {self.size}")
+
+
+class Bin:
+    """A fixed-capacity bin (a worker VM in the paper's model)."""
+
+    __slots__ = ("capacity", "used", "items")
+
+    def __init__(self, capacity: float = 1.0, used: float = 0.0):
+        self.capacity = float(capacity)
+        self.used = float(used)
+        self.items: list[Item] = []
+
+    @property
+    def free(self) -> float:
+        return self.capacity - self.used
+
+    def fits(self, size: float) -> bool:
+        return size <= self.free + _EPS
+
+    def add(self, item: Item) -> None:
+        if not self.fits(item.size):
+            raise ValueError(
+                f"item of size {item.size} does not fit bin with free {self.free}"
+            )
+        self.items.append(item)
+        self.used += item.size
+
+    def remove(self, item: Item) -> None:
+        self.items.remove(item)
+        self.used -= item.size
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Bin(used={self.used:.3f}/{self.capacity:.3f}, n={len(self.items)})"
+
+
+@dataclasses.dataclass
+class PackResult:
+    """Outcome of packing a sequence of items.
+
+    ``assignments[i]`` is the bin index item ``i`` was placed in.  ``opened``
+    is the number of bins newly opened by this run (the worker scale-up the
+    IRM derives from a packing run).
+    """
+
+    assignments: list[int]
+    bins: list["Bin"]
+    opened: int
+
+    @property
+    def num_bins(self) -> int:
+        return len(self.bins)
+
+
+class AnyFit:
+    """General Any-Fit approach (paper Algorithm 1).
+
+    Items are packed in arrival order.  ``_choose`` returns the index of the
+    active bin to place the item in, or ``None`` — in which case (and only in
+    which case) a new bin is opened.  Subclasses implement the search
+    criterion; the base class owns the shared packing loop.
+    """
+
+    name = "any-fit"
+
+    def __init__(self, capacity: float = 1.0, bins: Optional[list[Bin]] = None):
+        self.capacity = float(capacity)
+        self.bins: list[Bin] = list(bins) if bins is not None else []
+
+    # -- search criterion ---------------------------------------------------
+    def _choose(self, size: float) -> Optional[int]:
+        raise NotImplementedError
+
+    # -- shared loop (Algorithm 1) ------------------------------------------
+    def pack_one(self, item: Item) -> int:
+        """Pack a single item online; returns the bin index used."""
+        if item.size > self.capacity + _EPS:
+            raise ValueError(
+                f"item size {item.size} exceeds bin capacity {self.capacity}"
+            )
+        idx = self._choose(item.size)
+        if idx is None:
+            idx = self._open_bin()
+        self.bins[idx].add(item)
+        self._on_update(idx)
+        return idx
+
+    def pack(self, items: Iterable[Item]) -> PackResult:
+        before = len(self.bins)
+        assignments = [self.pack_one(it) for it in items]
+        return PackResult(
+            assignments=assignments,
+            bins=self.bins,
+            opened=len(self.bins) - before,
+        )
+
+    # -- hooks ---------------------------------------------------------------
+    def _open_bin(self) -> int:
+        self.bins.append(Bin(self.capacity))
+        return len(self.bins) - 1
+
+    def _on_update(self, idx: int) -> None:  # pragma: no cover - hook
+        pass
+
+    def reset(self) -> None:
+        self.bins = []
+
+
+class FirstFit(AnyFit):
+    """First-Fit: lowest-index active bin that fits (R = 1.7)."""
+
+    name = "first-fit"
+
+    def _choose(self, size: float) -> Optional[int]:
+        for i, b in enumerate(self.bins):
+            if b.fits(size):
+                return i
+        return None
+
+
+class FirstFitTree(AnyFit):
+    """First-Fit with an O(log m) per-item search via a max segment tree.
+
+    The tree stores the maximum free capacity over ranges of bin indices;
+    descending left-first finds the lowest-index bin whose free capacity is
+    >= the item size.  This realizes the O(n log n) total complexity the
+    paper quotes for First-Fit.  Behaviour is exactly equivalent to
+    ``FirstFit`` (property-tested).
+    """
+
+    name = "first-fit-tree"
+
+    def __init__(self, capacity: float = 1.0, bins: Optional[list[Bin]] = None):
+        super().__init__(capacity, bins)
+        self._cap = 1
+        while self._cap < max(1, len(self.bins)):
+            self._cap *= 2
+        self._tree = [0.0] * (2 * self._cap)
+        for i, b in enumerate(self.bins):
+            self._tree[self._cap + i] = b.free
+        for i in range(self._cap - 1, 0, -1):
+            self._tree[i] = max(self._tree[2 * i], self._tree[2 * i + 1])
+
+    def _grow(self) -> None:
+        old_cap, old_tree = self._cap, self._tree
+        self._cap *= 2
+        self._tree = [0.0] * (2 * self._cap)
+        self._tree[self._cap : self._cap + old_cap] = old_tree[old_cap : 2 * old_cap]
+        for i in range(self._cap - 1, 0, -1):
+            self._tree[i] = max(self._tree[2 * i], self._tree[2 * i + 1])
+
+    def _update(self, idx: int, free: float) -> None:
+        i = self._cap + idx
+        self._tree[i] = free
+        i //= 2
+        while i >= 1:
+            self._tree[i] = max(self._tree[2 * i], self._tree[2 * i + 1])
+            i //= 2
+
+    def _choose(self, size: float) -> Optional[int]:
+        if self._tree[1] + _EPS < size:
+            return None
+        i = 1
+        while i < self._cap:
+            if self._tree[2 * i] + _EPS >= size:
+                i = 2 * i
+            else:
+                i = 2 * i + 1
+        idx = i - self._cap
+        return idx if idx < len(self.bins) else None
+
+    def _open_bin(self) -> int:
+        idx = super()._open_bin()
+        if idx >= self._cap:
+            self._grow()
+        self._update(idx, self.bins[idx].free)
+        return idx
+
+    def _on_update(self, idx: int) -> None:
+        self._update(idx, self.bins[idx].free)
+
+    def reset(self) -> None:
+        super().reset()
+        self._cap = 1
+        self._tree = [0.0, 0.0]
+
+
+class BestFit(AnyFit):
+    """Best-Fit: the fitting bin with *minimum* residual free capacity."""
+
+    name = "best-fit"
+
+    def _choose(self, size: float) -> Optional[int]:
+        best, best_free = None, math.inf
+        for i, b in enumerate(self.bins):
+            if b.fits(size) and b.free < best_free:
+                best, best_free = i, b.free
+        return best
+
+
+class WorstFit(AnyFit):
+    """Worst-Fit: the fitting bin with *maximum* free capacity."""
+
+    name = "worst-fit"
+
+    def _choose(self, size: float) -> Optional[int]:
+        best, best_free = None, -math.inf
+        for i, b in enumerate(self.bins):
+            if b.fits(size) and b.free > best_free:
+                best, best_free = i, b.free
+        return best
+
+
+class NextFit(AnyFit):
+    """Next-Fit: only the most recently opened bin is considered (R = 2)."""
+
+    name = "next-fit"
+
+    def _choose(self, size: float) -> Optional[int]:
+        if self.bins and self.bins[-1].fits(size):
+            return len(self.bins) - 1
+        return None
+
+
+class FirstFitDecreasing:
+    """Offline First-Fit-Decreasing — the quality reference (R = 11/9).
+
+    Not online (sorts the whole sequence), used in benchmarks to quantify the
+    optimality gap of the online packers, and by the training-data packer in
+    *batch* mode where a whole shard of documents is visible at once.
+    """
+
+    name = "first-fit-decreasing"
+
+    def __init__(self, capacity: float = 1.0):
+        self.capacity = capacity
+
+    def pack(self, items: Sequence[Item]) -> PackResult:
+        order = sorted(range(len(items)), key=lambda i: -items[i].size)
+        ff = FirstFitTree(self.capacity)
+        assignments = [0] * len(items)
+        for i in order:
+            assignments[i] = ff.pack_one(items[i])
+        return PackResult(assignments=assignments, bins=ff.bins, opened=len(ff.bins))
+
+
+class Harmonic(AnyFit):
+    """Harmonic(M) (Lee & Lee [20], cited by the paper).
+
+    Items are classified into harmonic intervals (1/(k+1), 1/k]; each class k
+    packs into its own bins, k items per bin.  R_inf ≈ 1.691 as M → ∞.
+    Included for the algorithm-comparison benchmark; the IRM default stays
+    First-Fit as in the paper.
+    """
+
+    name = "harmonic"
+
+    def __init__(self, capacity: float = 1.0, m: int = 12):
+        super().__init__(capacity)
+        self.m = m
+        # class k in [1, m]; open bin index + count for each class
+        self._open: dict[int, int] = {}
+
+    def _class_of(self, size: float) -> int:
+        frac = size / self.capacity
+        k = min(self.m, int(math.floor(1.0 / max(frac, 1e-12))))
+        return max(1, k)
+
+    def _choose(self, size: float) -> Optional[int]:
+        k = self._class_of(size)
+        idx = self._open.get(k)
+        if idx is not None and self.bins[idx].fits(size) and (
+            len(self.bins[idx].items) < k
+        ):
+            return idx
+        return None
+
+    def pack_one(self, item: Item) -> int:
+        k = self._class_of(item.size)
+        idx = self._choose(item.size)
+        if idx is None:
+            idx = self._open_bin()
+            self._open[k] = idx
+        self.bins[idx].add(item)
+        return idx
+
+
+# ---------------------------------------------------------------------------
+# Multi-dimensional (vector) bin-packing — the paper's future-work Sec. VII.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VectorItem:
+    """An item with one size per resource dimension (e.g. CPU, RAM, net)."""
+
+    sizes: tuple[float, ...]
+    tag: Any = None
+
+    def __post_init__(self) -> None:
+        if not self.sizes:
+            raise ValueError("vector item needs at least one dimension")
+        for s in self.sizes:
+            if not (0.0 <= s <= 1.0 + _EPS):
+                raise ValueError(f"vector item sizes must be in [0, 1], got {s}")
+        if max(self.sizes) <= 0.0:
+            raise ValueError("vector item must be non-zero in some dimension")
+
+
+class VectorBin:
+    __slots__ = ("capacity", "used", "items")
+
+    def __init__(self, capacity: tuple[float, ...]):
+        self.capacity = tuple(float(c) for c in capacity)
+        self.used = tuple(0.0 for _ in capacity)
+        self.items: list[VectorItem] = []
+
+    @property
+    def free(self) -> tuple[float, ...]:
+        return tuple(c - u for c, u in zip(self.capacity, self.used))
+
+    def fits(self, sizes: Sequence[float]) -> bool:
+        return all(s <= f + _EPS for s, f in zip(sizes, self.free))
+
+    def add(self, item: VectorItem) -> None:
+        if not self.fits(item.sizes):
+            raise ValueError("vector item does not fit")
+        self.items.append(item)
+        self.used = tuple(u + s for u, s in zip(self.used, item.sizes))
+
+
+class VectorFirstFit:
+    """First-Fit for vector bin-packing with pluggable tie-break heuristics.
+
+    ``heuristic``:
+      - ``"first"``: lowest index feasible bin (pure First-Fit semantics);
+      - ``"dot"``:   feasible bin maximizing <used, item> alignment (packs
+                     complementary workloads together — Panigrahy et al.);
+      - ``"l2"``:    feasible bin minimizing the L2 norm of the residual free
+                     vector after placement.
+    """
+
+    name = "vector-first-fit"
+
+    def __init__(
+        self,
+        capacity: tuple[float, ...] = (1.0,),
+        heuristic: str = "first",
+    ):
+        if heuristic not in ("first", "dot", "l2"):
+            raise ValueError(f"unknown heuristic {heuristic!r}")
+        self.capacity = tuple(capacity)
+        self.heuristic = heuristic
+        self.bins: list[VectorBin] = []
+
+    def _score(self, b: VectorBin, item: VectorItem) -> float:
+        if self.heuristic == "dot":
+            return sum(u * s for u, s in zip(b.used, item.sizes))
+        # l2: negative residual norm (maximize => minimize residual)
+        resid = [f - s for f, s in zip(b.free, item.sizes)]
+        return -math.sqrt(sum(r * r for r in resid))
+
+    def pack_one(self, item: VectorItem) -> int:
+        feasible = [i for i, b in enumerate(self.bins) if b.fits(item.sizes)]
+        if not feasible:
+            self.bins.append(VectorBin(self.capacity))
+            idx = len(self.bins) - 1
+        elif self.heuristic == "first":
+            idx = feasible[0]
+        else:
+            idx = max(feasible, key=lambda i: self._score(self.bins[i], item))
+        self.bins[idx].add(item)
+        return idx
+
+    def pack(self, items: Iterable[VectorItem]) -> PackResult:
+        before = len(self.bins)
+        assignments = [self.pack_one(it) for it in items]
+        return PackResult(
+            assignments=assignments,
+            bins=self.bins,  # type: ignore[arg-type]
+            opened=len(self.bins) - before,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+
+def lower_bound(sizes: Iterable[float], capacity: float = 1.0) -> int:
+    """L1 lower bound on the optimal bin count: ceil(sum(sizes)/capacity).
+
+    This is the "ideal number of bins" line in the paper's Fig. 10.
+    """
+    total = sum(sizes)
+    if total <= 0:
+        return 0
+    return int(math.ceil(total / capacity - _EPS))
+
+
+_PACKERS: dict[str, Callable[..., AnyFit]] = {
+    "first-fit": FirstFit,
+    "first-fit-tree": FirstFitTree,
+    "best-fit": BestFit,
+    "worst-fit": WorstFit,
+    "next-fit": NextFit,
+    "harmonic": Harmonic,
+}
+
+
+def make_packer(name: str, capacity: float = 1.0, **kw: Any) -> AnyFit:
+    """Factory used by the IRM config (``irm.packing_algorithm``)."""
+    try:
+        cls = _PACKERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown packing algorithm {name!r}; options: {sorted(_PACKERS)}"
+        ) from None
+    return cls(capacity=capacity, **kw)

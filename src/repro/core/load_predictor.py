@@ -1,0 +1,99 @@
+"""Load predictor (paper Section V-B.4).
+
+Tracks the pressure of streaming requests by watching the master message
+queue length and its rate of change (ROC).  Four threshold cases decide
+between a *large* and a *small* increase in PEs:
+
+    case 1: ROC >= roc_high   OR queue >= queue_high   -> large increase
+    case 2: ROC >= roc_low    AND queue >= queue_low   -> large increase
+    case 3: ROC >= roc_low    (queue moderate)         -> small increase
+    case 4: queue >= queue_low (ROC moderate)          -> small increase
+
+i.e. "if the ROC is very large or the queue is very long, this indicates that
+data streams are not processed fast enough" (paper).  Queue metrics are read
+periodically, and after scheduling more PEs there is a cooldown timeout before
+the predictor reads them again — scheduling PEs ahead of need "gives HIO time
+to set up additional workers and reduces the congestion".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["LoadPredictorConfig", "LoadPredictor", "ScaleDecision"]
+
+
+@dataclasses.dataclass
+class LoadPredictorConfig:
+    # queue-length thresholds (messages)
+    queue_low: float = 8.0
+    queue_high: float = 64.0
+    # rate-of-change thresholds (messages / second)
+    roc_low: float = 1.0
+    roc_high: float = 8.0
+    # scale-up magnitudes (number of PEs queued)
+    small_increase: int = 2
+    large_increase: int = 8
+    # how often queue metrics are read (seconds)
+    read_interval: float = 1.0
+    # timeout after a scale-up before metrics are read again (seconds)
+    cooldown: float = 5.0
+
+
+@dataclasses.dataclass
+class ScaleDecision:
+    num_pes: int
+    case: int  # 0 = no action, 1..4 as documented above
+    roc: float
+    queue_len: float
+
+
+class LoadPredictor:
+    """Queue-pressure-driven PE scale-up decisions."""
+
+    def __init__(self, config: Optional[LoadPredictorConfig] = None):
+        self.config = config or LoadPredictorConfig()
+        self._last_read_t: Optional[float] = None
+        self._last_len: Optional[float] = None
+        self._cooldown_until: float = -1.0
+
+    def reset(self) -> None:
+        self._last_read_t = None
+        self._last_len = None
+        self._cooldown_until = -1.0
+
+    def update(self, t: float, queue_len: float) -> ScaleDecision:
+        """Periodic read of queue metrics; returns the scale-up decision.
+
+        ``t`` is the current (simulated or wall) time in seconds.  Returns a
+        decision with ``num_pes == 0`` while within the read interval or the
+        post-scale-up cooldown.
+        """
+        cfg = self.config
+        noop = ScaleDecision(0, 0, 0.0, queue_len)
+
+        if t < self._cooldown_until:
+            return noop
+        if self._last_read_t is not None and (t - self._last_read_t) < cfg.read_interval:
+            return noop
+
+        roc = 0.0
+        if self._last_read_t is not None and t > self._last_read_t:
+            roc = (queue_len - self._last_len) / (t - self._last_read_t)
+        self._last_read_t = t
+        self._last_len = queue_len
+
+        case, num = 0, 0
+        if roc >= cfg.roc_high or queue_len >= cfg.queue_high:
+            case, num = 1, cfg.large_increase
+        elif roc >= cfg.roc_low and queue_len >= cfg.queue_low:
+            case, num = 2, cfg.large_increase
+        elif roc >= cfg.roc_low:
+            case, num = 3, cfg.small_increase
+        elif queue_len >= cfg.queue_low:
+            case, num = 4, cfg.small_increase
+
+        if num > 0:
+            self._cooldown_until = t + cfg.cooldown
+        return ScaleDecision(num_pes=num, case=case, roc=roc, queue_len=queue_len)

@@ -1,0 +1,109 @@
+"""Worker profiler (paper Section V-B.3).
+
+Two-part design, exactly as in the paper:
+
+  1. ``WorkerProbe`` lives on each worker VM and periodically measures the
+     current CPU usage of every running PE, averages per container image, and
+     reports the per-image means to the master.
+  2. ``MasterProfiler`` aggregates reports from all active workers and keeps a
+     moving average over the last N measurements per image (N configurable).
+     The average is the *item size* used by the bin-packing manager, and
+     updated averages are propagated to requests waiting in the container and
+     allocation queues (see ``queues.ContainerQueue.refresh_estimates``).
+
+This is the paper's "run-time learning process" that replaces trained models:
+no training data, no fitting — just profiled observations of the running
+workloads.  The same class profiles decode-step cost per request class in the
+serving engine and per-source document length in the data pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+__all__ = ["ProfilerConfig", "MasterProfiler", "WorkerProbe"]
+
+
+@dataclasses.dataclass
+class ProfilerConfig:
+    # Number of most-recent measurements in the moving average ("N being
+    # arbitrarily configurable" — paper V-B.3).
+    window: int = 32
+    # Initial guess for a never-before-seen workload class.  The paper notes
+    # the first run performs slightly worse while this guess is corrected.
+    default_size: float = 0.5
+    # Clamp profiled sizes into (0, 1] so they are valid bin-packing items.
+    min_size: float = 1e-3
+    max_size: float = 1.0
+
+
+class MasterProfiler:
+    """Moving-average profile of resource usage per workload class."""
+
+    def __init__(self, config: Optional[ProfilerConfig] = None):
+        self.config = config or ProfilerConfig()
+        self._samples: Dict[str, deque] = {}
+        self._count: Dict[str, int] = {}
+
+    # -- ingest --------------------------------------------------------------
+    def observe(self, image: str, value: float) -> None:
+        """Record one aggregated measurement for a workload class."""
+        dq = self._samples.get(image)
+        if dq is None:
+            dq = deque(maxlen=self.config.window)
+            self._samples[image] = dq
+            self._count[image] = 0
+        dq.append(float(value))
+        self._count[image] += 1
+
+    def observe_report(self, report: Mapping[str, float]) -> None:
+        """Ingest a worker probe report: {image: mean usage on that worker}."""
+        for image, value in report.items():
+            self.observe(image, value)
+
+    # -- query ---------------------------------------------------------------
+    def estimate(self, image: str) -> float:
+        """Moving-average item size for ``image`` (default guess if unseen)."""
+        dq = self._samples.get(image)
+        if not dq:
+            est = self.config.default_size
+        else:
+            est = sum(dq) / len(dq)
+        return min(self.config.max_size, max(self.config.min_size, est))
+
+    def num_observations(self, image: str) -> int:
+        return self._count.get(image, 0)
+
+    def known_images(self) -> Tuple[str, ...]:
+        return tuple(self._samples)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {img: self.estimate(img) for img in self._samples}
+
+
+class WorkerProbe:
+    """Worker-side half: per-PE CPU samples -> per-image means.
+
+    ``sample`` is called at ``report_interval`` (the paper's experiments use
+    1 second) with the instantaneous usage of every PE on this worker.
+    """
+
+    def __init__(self) -> None:
+        self._acc: Dict[str, list] = {}
+
+    def sample(self, pe_usages: Iterable[Tuple[str, float]]) -> None:
+        """Accumulate one round of (image, usage) samples."""
+        for image, usage in pe_usages:
+            self._acc.setdefault(image, []).append(float(usage))
+
+    def report(self) -> Dict[str, float]:
+        """Flush: per-image mean since the last report (sent to the master)."""
+        out = {
+            image: sum(vals) / len(vals)
+            for image, vals in self._acc.items()
+            if vals
+        }
+        self._acc = {}
+        return out

@@ -1,0 +1,256 @@
+"""Apache Spark Streaming dynamic-allocation baseline (paper Section VI-B.1).
+
+The paper compares HIO+IRM against a Spark Streaming application processing
+the same CellProfiler workload, configured — after their initial attempts
+with ``spark.streaming.dynamicAllocation`` failed to scale within the first
+batch — with the older core dynamic allocation:
+
+  - micro-batching with a 5 s batch interval,
+  - ``spark.dynamicAllocation.executorIdleTimeout = 20 s``,
+  - ``spark.streaming.concurrentJobs = 3`` so other cores can start the next
+    batch while waiting for the 10–20 s "tail" tasks of the previous job,
+  - exponential executor ramp-up (1, 2, 4, ... per backlog round), the
+    standard Spark dynamic-allocation policy.
+
+This module reproduces that behaviour in the same fixed-timestep style as
+``core/sim.py`` so Fig. 7 (executor cores vs. actual CPU, scale-down events)
+and the ~2x end-to-end wall-time gap vs. HIO can be regenerated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .workloads import Message, Stream
+
+__all__ = ["SparkConfig", "SparkResult", "simulate_spark"]
+
+
+@dataclasses.dataclass
+class SparkConfig:
+    dt: float = 0.5
+    batch_interval: float = 5.0        # Spark Streaming micro-batch interval
+    concurrent_jobs: int = 3           # spark.streaming.concurrentJobs
+    executor_idle_timeout: float = 20.0  # spark.dynamicAllocation.executorIdleTimeout
+    backlog_timeout: float = 1.0       # schedulerBacklogTimeout (ramp cadence)
+    executor_cores: int = 8            # one executor per SSC.xlarge worker
+    max_executors: int = 5             # 5 workers => 40 cores total
+    executor_start_delay: float = 3.0
+    # client-side arrival rate of image files into the streaming source dir
+    arrival_rate: float = 10.0         # images / second
+    # serial per-image job overhead (driver-side file listing + NFS reads):
+    # the paper observes "idle gaps in between" batches and hypothesizes
+    # "the time could have been spent reading the images from disk".
+    # Per-image NFS read time (images are "order MB" over a shared NFS
+    # mount from an SSC.small VM — ~5-10 MB at 10-20 MB/s).  Calibrated so
+    # the simulated run reproduces Fig. 7's observed inter-batch gaps and
+    # the ~2x end-to-end wall-time vs. HIO reported in Section VI-B.
+    job_setup_per_task: float = 0.7    # seconds per image, serial NFS chain
+    # the paper: "For unknown reasons, the system sat idle with 2 executors
+    # for some time" — an observed driver stall at the start of the run.
+    initial_stall: float = 75.0
+    # per-task I/O inflation (NFS image reads; the paper's hypothesis for
+    # the idle gaps: "time could have been spent reading the images from
+    # disk").
+    task_io_overhead: float = 0.18
+    cpu_noise_std: float = 0.02
+    t_max: float = 3600.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SparkResult:
+    times: np.ndarray
+    executor_cores: np.ndarray   # total registered executor cores (REST API view)
+    used_cores: np.ndarray       # measured busy cores (the `top` poll)
+    pending_tasks: np.ndarray
+    scale_downs: List[float]     # times when executors were removed (red circles)
+    completed: int
+    total: int
+    makespan: float
+
+
+class _Executor:
+    __slots__ = ("cores", "tasks", "idle_since", "ready_t")
+
+    def __init__(self, t: float, cores: int, start_delay: float):
+        self.cores = cores
+        self.tasks: List[Message] = []  # running tasks (1 core each)
+        self.idle_since = t
+        self.ready_t = t + start_delay
+
+
+class _Job:
+    """One micro-batch job: a set of single-core tasks (CellProfiler procs)."""
+
+    __slots__ = ("tasks", "remaining", "submitted", "ready_t")
+
+    def __init__(self, tasks: List[Message], t: float):
+        self.tasks = list(tasks)
+        self.remaining = len(tasks)
+        self.submitted = t
+        self.ready_t = t  # set at admission: serial setup/IO before tasks run
+
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+
+def simulate_spark(
+    stream: Stream, config: Optional[SparkConfig] = None
+) -> SparkResult:
+    cfg = config or SparkConfig()
+    rng = np.random.default_rng(cfg.seed)
+
+    # flatten the stream into client-side arrivals at cfg.arrival_rate
+    all_msgs: List[Message] = [m for _, batch in stream.batches for m in batch]
+    arrival_times = np.arange(len(all_msgs)) / cfg.arrival_rate
+    total = len(all_msgs)
+
+    executors: List[_Executor] = [_Executor(0.0, cfg.executor_cores, 0.0)]
+    jobs_waiting: List[_Job] = []
+    jobs_running: List[_Job] = []
+    in_flight: List[Tuple[Message, _Executor, _Job]] = []
+    source_buffer: List[Message] = []
+    completed = 0
+    makespan = 0.0
+    next_arrival = 0
+    last_batch_t = 0.0
+    ramp = 1  # exponential ramp counter
+    last_ramp_t = -1e9
+    io_busy_until = 0.0  # NFS share: one job reads images at a time
+
+    times: List[float] = []
+    cores_ts: List[float] = []
+    used_ts: List[float] = []
+    pending_ts: List[int] = []
+    scale_downs: List[float] = []
+
+    t = 0.0
+    while t <= cfg.t_max:
+        # 1. new files land in the source directory
+        while next_arrival < total and arrival_times[next_arrival] <= t:
+            source_buffer.append(all_msgs[next_arrival])
+            next_arrival += 1
+
+        # 2. batch boundary: everything in the buffer becomes one job
+        if t - last_batch_t >= cfg.batch_interval:
+            last_batch_t = t
+            if source_buffer:
+                jobs_waiting.append(_Job(source_buffer, t))
+                source_buffer = []
+
+        # 3. admit jobs up to the concurrency limit; admission starts the
+        #    setup/IO phase.  The NFS share is a single contended resource,
+        #    so I/O phases serialize across concurrent jobs — the source of
+        #    the inter-batch idle gaps the paper observes in Fig. 7.
+        while jobs_waiting and len(jobs_running) < cfg.concurrent_jobs:
+            job = jobs_waiting.pop(0)
+            io_start = max(t, io_busy_until)
+            job.ready_t = io_start + cfg.job_setup_per_task * len(job.tasks)
+            io_busy_until = job.ready_t
+            jobs_running.append(job)
+
+        # 4. finish tasks
+        still: List[Tuple[Message, _Executor, _Job]] = []
+        for msg, ex, job in in_flight:
+            if t >= msg.done_t:
+                ex.tasks.remove(msg)
+                job.remaining -= 1
+                completed += 1
+                makespan = max(makespan, msg.done_t)
+                if not ex.tasks:
+                    ex.idle_since = t
+            else:
+                still.append((msg, ex, job))
+        in_flight = still
+        jobs_running = [j for j in jobs_running if not j.done()]
+
+        # 5. schedule pending tasks of jobs past their setup phase
+        stalled = t < cfg.initial_stall
+        pending = [
+            (task, j)
+            for j in jobs_running
+            if t >= j.ready_t
+            for task in j.tasks
+            if task.start_t < 0
+        ]
+        if not stalled:
+            for ex in executors:
+                if t < ex.ready_t:
+                    continue
+                free = ex.cores - len(ex.tasks)
+                while free > 0 and pending:
+                    task, job = pending.pop(0)
+                    task.start_t = t
+                    task.done_t = t + task.duration * (1.0 + cfg.task_io_overhead)
+                    ex.tasks.append(task)
+                    in_flight.append((task, ex, job))
+                    free -= 1
+
+        # 6. dynamic allocation: exponential ramp while tasks are backlogged
+        #    (held at 2 executors during the observed initial stall)
+        n_pending = len(pending)
+        if stalled:
+            while len(executors) < 2:
+                executors.append(
+                    _Executor(t, cfg.executor_cores, cfg.executor_start_delay)
+                )
+        elif n_pending > 0 and (t - last_ramp_t) >= cfg.backlog_timeout:
+            want = min(cfg.max_executors, len(executors) + ramp)
+            while len(executors) < want:
+                executors.append(
+                    _Executor(t, cfg.executor_cores, cfg.executor_start_delay)
+                )
+            ramp *= 2
+            last_ramp_t = t
+        elif n_pending == 0:
+            ramp = 1
+
+        # 7. idle-timeout scale-down (the paper's red circles)
+        kept: List[_Executor] = []
+        for ex in executors:
+            if (
+                not ex.tasks
+                and t >= ex.ready_t
+                and (t - ex.idle_since) >= cfg.executor_idle_timeout
+                and len(executors) > 1
+                and len(kept) + (len(executors) - len(kept) - 1) >= 1
+            ):
+                scale_downs.append(t)
+                executors_removed = True  # noqa: F841  (debug marker)
+                continue
+            kept.append(ex)
+        executors = kept
+
+        # 8. record
+        reg_cores = sum(ex.cores for ex in executors if t >= ex.ready_t)
+        busy = sum(len(ex.tasks) for ex in executors)
+        noise = rng.normal(0.0, cfg.cpu_noise_std * max(busy, 1))
+        times.append(t)
+        cores_ts.append(float(reg_cores))
+        used_ts.append(float(max(0.0, busy + noise)))
+        pending_ts.append(n_pending)
+
+        if (
+            completed >= total
+            and next_arrival >= total
+            and not jobs_waiting
+            and not jobs_running
+            and not source_buffer
+        ):
+            break
+        t = round(t + cfg.dt, 9)
+
+    return SparkResult(
+        times=np.array(times),
+        executor_cores=np.array(cores_ts),
+        used_cores=np.array(used_ts),
+        pending_tasks=np.array(pending_ts),
+        scale_downs=scale_downs,
+        completed=completed,
+        total=total,
+        makespan=makespan,
+    )

@@ -1,0 +1,83 @@
+"""Activation-sharding context.
+
+Models call ``constrain(x, axes)`` at layer boundaries with *logical* axis
+names; when a mesh context is active (set by the dry-run / train / serve
+drivers) this becomes ``jax.lax.with_sharding_constraint`` with the
+PartitionSpec resolved through the same divisibility-aware rules as the
+parameters.  Without a context it is a no-op, so model code stays
+mesh-agnostic and single-device tests are untouched.
+
+This is what pins the distributed layout: batch over the data axes,
+sequence over ``model`` between blocks (Megatron-style sequence
+parallelism), heads/mlp over ``model`` inside blocks.  Without these
+constraints XLA's sharding propagation replicates the big activations and
+re-communicates inside the attention chunk loops (measured: 1.3 TB/step/dev
+on olmo-1b train_4k — see EXPERIMENTS.md §Perf iteration 1).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+
+from .sharding import Rules, axes_to_pspec, make_rules
+
+__all__ = ["activation_sharding", "constrain", "current_mesh"]
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: Optional[Rules] = None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules or make_rules(mesh))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh():
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def batch_shard_count(batch_size: int) -> int:
+    """How many ways the active layout shards a batch dim of this size.
+
+    Used by the MoE layer to pick the dispatch-group count: routing,
+    sorting, and capacity-bin scatter are then *shard-local* by
+    construction (a leading group axis sharded exactly like the batch), so
+    the SPMD partitioner never moves dispatch state across devices.
+    Returns 1 when no mesh context is active.
+    """
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    spec = axes_to_pspec(("batch",), (batch_size,), rules, mesh)
+    entry = spec[0]
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Apply a logical-axes sharding constraint if a mesh context is active."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} rank != array rank {x.ndim}")
+    spec = axes_to_pspec(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )

@@ -1,0 +1,253 @@
+"""Logical-axis sharding rules -> NamedShardings.
+
+Parameters and inputs carry *logical* axis names (see ``models/params.Spec``);
+this module maps them onto mesh axes with divisibility- and conflict-aware
+resolution:
+
+  - an axis rule is an ordered tuple of candidate mesh axes; each candidate
+    is taken greedily if (a) it is not already used by an earlier dim of the
+    same tensor and (b) the accumulated shard count divides the dim size;
+  - this makes one rule table serve every architecture: e.g. ``kv_heads ->
+    ("model",)`` shards qwen2's 8 KV heads nowhere (8 % 16 != 0 -> replicate)
+    but olmo's 16 heads 16-way; ``experts -> ("model",)`` gives qwen3-moe
+    128-expert EP but falls back to expert-internal TP (via ``mlp``) for
+    grok's 8 experts;
+  - batch/sequence rules compose: ``kv_seq -> (data..., "model")`` gives
+    decode_32k (B=128) batch-over-data + cache-seq-over-model, and
+    long_500k (B=1) cache-seq over the *whole* mesh.
+
+Training layout: FSDP over the data axes (params' ``embed`` dim) x tensor
+parallelism over ``model`` (heads / mlp / vocab) — the standard 2D layout
+MaxText uses; the ``pod`` axis extends FSDP/data-parallel across pods.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "Rules",
+    "make_rules",
+    "spec_to_pspec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+]
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def make_rules(mesh: Mesh, layout: str = "tp") -> Rules:
+    """Two production layouts.
+
+    ``"tp"`` (baseline, paper-faithful port of the standard 2D layout):
+    batch over the data axes, tensor parallelism over ``model`` (heads /
+    mlp / vocab / experts), sequence parallelism between blocks.  Costs two
+    full-activation all-reduces per layer on the model axis.
+
+    ``"fsdp"`` (beyond-paper §Perf layout): activations are batch-sharded
+    over EVERY mesh axis and all compute is local; parameters stay
+    2D-sharded at rest (embed dim over data axes, model dims over
+    ``model``) and are all-gathered at use, ZeRO-3 style — weight
+    collectives overlap with per-layer compute under the latency-hiding
+    scheduler, while activation collectives disappear.  Wins whenever
+    tokens-per-step is large (train_4k: 1M tokens makes weight bytes ≪
+    activation bytes).
+    """
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")  # ("pod","data") or ("data",)
+    if layout == "tp":
+        return {
+            # parameter axes
+            "vocab": ("model",),
+            "embed": data_axes,            # FSDP storage of the d dim
+            "mlp": ("model",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "head_dim": (),
+            "experts": ("model",),
+            "layers": (),
+            # activation / input axes
+            "batch": data_axes,
+            "batch_data": data_axes,       # batch over data ONLY (CE chunks:
+                                           # leaves "model" free for vocab)
+            "seq": ("model",),             # sequence parallelism
+            "kv_seq": data_axes + ("model",),
+            "pages": data_axes + ("model",),
+        }
+    if layout == "fsdp":
+        return {
+            # parameter axes: same 2D-sharded storage as "tp" …
+            "vocab": ("model",),
+            "embed": data_axes,
+            "mlp": ("model",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "head_dim": (),
+            "experts": ("model",),
+            "layers": (),
+            # … but activations shard batch over EVERYTHING and nothing else
+            "batch": data_axes + ("model",),
+            "batch_data": data_axes,
+            "seq": (),
+            "kv_seq": data_axes + ("model",),
+            "pages": data_axes + ("model",),
+        }
+    if layout == "serve":
+        # decode-optimized: weights REPLICATED over the data axes (read
+        # from HBM at 819 GB/s instead of re-gathered over 50 GB/s ICI
+        # every token), TP over "model" only; KV cache batch-over-data +
+        # sequence-over-model with the shard_map flash-decode combine.
+        return {
+            "vocab": ("model",),
+            "embed": (),
+            "mlp": ("model",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "head_dim": (),
+            "experts": ("model",),
+            "layers": (),
+            "batch": data_axes,
+            "batch_data": data_axes,
+            "seq": ("model",),
+            "kv_seq": data_axes + ("model",),
+            "pages": data_axes + ("model",),
+        }
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+def _resolve_dim(
+    name: Optional[str],
+    size: int,
+    rules: Rules,
+    mesh: Mesh,
+    used: set,
+) -> Any:
+    if name is None:
+        return None
+    candidates = rules.get(name, ())
+    chosen = []
+    prod = 1
+    for ax in candidates:
+        ax_size = mesh.shape[ax]
+        if ax in used:
+            continue
+        if size % (prod * ax_size) != 0:
+            continue
+        chosen.append(ax)
+        prod *= ax_size
+    for ax in chosen:
+        used.add(ax)
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def axes_to_pspec(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    used: set = set()
+    entries = [
+        _resolve_dim(name, size, rules, mesh, used)
+        for name, size in zip(axes, shape)
+    ]
+    return P(*entries)
+
+
+def _is_spec(x: Any) -> bool:
+    # duck-typed to avoid importing models.params (circular import)
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "init")
+
+
+def spec_to_pspec(spec: Any, rules: Rules, mesh: Mesh) -> P:
+    return axes_to_pspec(spec.axes, spec.shape, rules, mesh)
+
+
+def param_shardings(specs: Any, mesh: Mesh, rules: Optional[Rules] = None) -> Any:
+    rules = rules or make_rules(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, rules, mesh)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input batches and caches (ShapeDtypeStructs or arrays)
+# ---------------------------------------------------------------------------
+
+_BATCH_AXES = {
+    # training / prefill inputs
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "segment_ids": ("batch", "seq"),
+    "positions": ("batch", "seq"),
+    "vision_embeds": ("batch", None, "embed"),
+    "enc_embeds": ("batch", "seq", "embed"),
+    "enc_segment_ids": ("batch", "seq"),
+}
+
+
+def batch_shardings(
+    batch: Any, mesh: Mesh, rules: Optional[Rules] = None, *, decode: bool = False
+) -> Any:
+    """Shardings for a batch dict (by key), ShapeDtypeStruct-driven."""
+    rules = rules or make_rules(mesh)
+    out = {}
+    for key, leaf in batch.items():
+        if decode and key == "tokens":
+            axes: Tuple[Optional[str], ...] = ("batch", None)
+        else:
+            axes = _BATCH_AXES.get(key, ("batch",) + (None,) * (len(leaf.shape) - 1))
+        out[key] = NamedSharding(mesh, axes_to_pspec(axes, leaf.shape, rules, mesh))
+    return out
+
+
+def _cache_leaf_axes(path: Tuple[str, ...], shape: Tuple[int, ...]) -> Tuple:
+    """Logical axes for a cache leaf, keyed by its path/rank.
+
+    Dense KV caches are (layers, B, S, KVH, hd): batch over data, cache
+    sequence over whatever remains (incl. the whole mesh for B=1).
+    Recurrent states (mamba/xlstm) are small: shard batch + inner dim.
+    """
+    name = path[-1] if path else ""
+    if name in ("k", "v", "ck", "cv") and len(shape) == 5:
+        return ("layers", "batch", "kv_seq", "kv_heads", None)
+    if name == "len":
+        return ("batch",)
+    if name == "enc_segment_ids":
+        return ("batch", None)
+    if name == "conv":  # (layers, B, k-1, di)
+        return ("layers", "batch", None, "mlp")
+    if name == "ssm":  # (layers, B, di, ds)
+        return ("layers", "batch", "mlp", None)
+    if name == "C" and len(shape) == 5:  # (layers, B, H, dh, dh)
+        return ("layers", "batch", "heads", None, None)
+    if name in ("n", "m", "c", "h"):
+        return ("layers", "batch", "heads") + (None,) * (len(shape) - 3)
+    # fallback: batch on dim 1 if rank >= 2 (layers-stacked), else replicate
+    if len(shape) >= 2:
+        return ("layers", "batch") + (None,) * (len(shape) - 2)
+    return (None,) * len(shape)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, rules: Optional[Rules] = None) -> Any:
+    rules = rules or make_rules(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        names = tuple(
+            getattr(k, "key", getattr(k, "name", str(k))) for k in path
+        )
+        axes = _cache_leaf_axes(names, leaf.shape)
+        out.append(
+            NamedSharding(mesh, axes_to_pspec(axes, leaf.shape, rules, mesh))
+        )
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the packed flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["packed_attention_ref"]
+
+
+def packed_attention_ref(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, H, Skv, D)
+    v: jax.Array,            # (B, H, Skv, D)
+    segment_ids_q: jax.Array,   # (B, Sq)
+    segment_ids_kv: jax.Array,  # (B, Skv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    q_ids = jnp.arange(Sq)[:, None]
+    kv_ids = jnp.arange(Skv)[None, :]
+    mask = (segment_ids_q[:, :, None] == segment_ids_kv[:, None, :]) & (
+        segment_ids_kv[:, None, :] != 0
+    )
+    if causal:
+        mask &= (q_ids >= kv_ids)[None]
+    if window > 0:
+        mask &= (q_ids - kv_ids < window)[None]
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zero output
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

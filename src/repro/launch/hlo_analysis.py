@@ -1,0 +1,490 @@
+"""Trip-count-aware static analysis of optimized HLO.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, independent of
+its trip count (verified empirically — see tests/test_hlo_analysis.py), which
+silently undercounts every ``lax.scan``-based program: our layer stacks,
+flash-attention chunk loops, chunked recurrent scans and chunked CE are all
+scans.  This module re-derives the per-device cost from the HLO text with
+loop multipliers:
+
+  - dot/convolution FLOPs (the dominant terms) computed from shapes,
+  - collective wire bytes per kind, ICI vs DCN classified from replica
+    groups (a group whose members span >= one pod crosses the DCN),
+  - dot operand/result bytes as an HBM-traffic proxy,
+
+all accumulated recursively: fusions/calls x1, while bodies x trip count
+(extracted from the loop condition's comparison constant — exact for scans),
+conditionals take the max branch.
+
+Wire-byte conventions per device (ring algorithms, documented in
+EXPERIMENTS.md): all-reduce 2x tensor bytes (RS+AG), all-gather = output
+bytes, reduce-scatter = input bytes, all-to-all / collective-permute =
+tensor bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo_text", "analyze_module"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(.*?)\s([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ("", [])
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return (m.group(1), dims)
+
+
+def _all_shapes_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    dot_bytes: float = 0.0           # dot operand+result bytes (HBM proxy)
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+    ici_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    coll_count: float = 0.0
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            flops=self.flops * k,
+            dot_bytes=self.dot_bytes * k,
+            coll={key: v * k for key, v in self.coll.items()},
+            ici_bytes=self.ici_bytes * k,
+            dcn_bytes=self.dcn_bytes * k,
+            coll_count=self.coll_count * k,
+        )
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.dot_bytes += other.dot_bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        self.ici_bytes += other.ici_bytes
+        self.dcn_bytes += other.dcn_bytes
+        self.coll_count += other.coll_count
+
+    @property
+    def coll_bytes(self) -> float:
+        return self.ici_bytes + self.dcn_bytes
+
+
+class _Op:
+    __slots__ = ("name", "rtype", "opcode", "operands", "attrs", "raw")
+
+    def __init__(self, name: str, rtype: str, opcode: str, operands: List[str],
+                 attrs: str, raw: str = ""):
+        self.name = name
+        self.rtype = rtype
+        self.opcode = opcode
+        self.operands = operands
+        self.attrs = attrs
+        self.raw = raw
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    ops: List[_Op] = []
+    for raw in text.splitlines():
+        line = raw.split(", metadata=")[0].rstrip()
+        if current is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                current = m.group(2)
+                if m.group(1):
+                    entry = current
+                ops = []
+            continue
+        if line.strip() == "}":
+            comps[current] = ops
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        mo = _OPCODE_RE.match(rest)
+        if not mo:
+            continue
+        rtype, opcode = mo.group(1).strip(), mo.group(2)
+        # operands: content of the first (...) after the opcode
+        start = rest.find(opcode + "(") + len(opcode) + 1
+        depth, i = 1, start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest[start : i - 1]
+        operands = [
+            o.strip().lstrip("%")
+            for o in re.split(r",\s*(?![^{]*})", operand_str)
+            if o.strip().startswith("%")
+        ]
+        attrs = rest[i:]
+        ops.append(_Op(name, rtype, opcode, operands, attrs, raw=line))
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _cond_trips(comps: Dict[str, List[_Op]], cond_name: str) -> int:
+    """Max integer constant in the loop condition (exact for lax.scan:
+    the induction variable starts at 0, steps by 1, compares LT bound)."""
+    best = 1
+    ops = comps.get(cond_name, [])
+    text_parts = []
+    for op in ops:
+        text_parts.append(op.raw)
+        # follow called fusions (the compare often lives inside one)
+        m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+        if m:
+            for sub in comps.get(m.group(1), []):
+                text_parts.append(sub.raw)
+    for m in _CONST_RE.finditer(" ".join(text_parts)):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def _replica_groups_cross_pod(attrs: str, pod_size: int) -> bool:
+    """True if any replica group spans devices >= pod_size apart."""
+    m = re.search(r"replica_groups=\{(.*?)\}\}", attrs)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in re.findall(r"\d+", grp)]
+            if ids and (max(ids) - min(ids)) >= pod_size:
+                return True
+        return False
+    # iota format: replica_groups=[2,256]<=[512] etc.
+    m = re.search(r"replica_groups=\[([\d,]+)\]<=\[(\d+)\]", attrs)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        total = int(m.group(2))
+        # group size = dims[-1]? iota grouping: first dim = num groups
+        if len(dims) >= 2:
+            group_sz = dims[-1]
+            stride = total // max(1, _numel(dims)) * 1
+            # conservative: a group that is not contiguous within a pod
+            return group_sz > pod_size or total > pod_size and dims[0] < (
+                total // pod_size
+            )
+    return False
+
+
+def _build_consumers(ops: List[_Op]) -> Dict[str, List[_Op]]:
+    out: Dict[str, List[_Op]] = {}
+    for op in ops:
+        for operand in op.operands:
+            out.setdefault(operand, []).append(op)
+    return out
+
+
+def _ar_is_scatterable(
+    op: _Op, consumers: Dict[str, List[_Op]]
+) -> bool:
+    """True if this all-reduce is the AR half of an AR+dynamic-slice pair.
+
+    The XLA *TPU* pipeline rewrites ``all-reduce`` whose result is
+    immediately (dynamic-)sliced to the consumer's shard into a
+    ``reduce-scatter`` (ReduceScatterCreator); the CPU pipeline this
+    dry-run compiles under does not run that pass.  Detecting the pattern
+    keeps the collective roofline term faithful to the TPU target: wire =
+    1x tensor bytes (ring RS) instead of 2x (ring AR).
+
+    Pattern matched: every transitive consumer (through get-tuple-element
+    and async -done hops) is a dynamic-slice / dynamic-update-slice op or
+    a fusion named for one.
+    """
+    frontier = list(consumers.get(op.name, []))
+    effective: List[_Op] = []
+    hops = 0
+    while frontier and hops < 1000:
+        c = frontier.pop()
+        hops += 1
+        if c.opcode == "get-tuple-element" or c.opcode.endswith("-done"):
+            frontier.extend(consumers.get(c.name, []))
+        else:
+            effective.append(c)
+    if not effective:
+        return False
+    for c in effective:
+        if c.opcode in ("dynamic-slice", "dynamic-update-slice"):
+            continue
+        if c.opcode == "fusion" and (
+            "dynamic-update-slice" in c.name or "dynamic-slice" in c.name
+        ):
+            continue
+        return False
+    return True
+
+
+def _is_bf16_promoted(
+    name: str, by_name: Dict[str, _Op], comps: Dict[str, List[_Op]]
+) -> bool:
+    """True if the named f32 value is a CPU-promoted bf16 tensor.
+
+    The CPU backend (the dry-run vehicle) has no native bf16 compute: XLA
+    promotes bf16 values to f32 via ``convert`` round-trips (usually fused
+    as ``convert_convert`` kLoop fusions).  On the TPU target the same
+    value is bf16.  Detection: the producer is a convert-from-bf16, or a
+    fusion whose body contains a bf16 value.
+    """
+    producer = by_name.get(name)
+    if producer is None:
+        return False
+    if producer.opcode == "convert" and producer.operands:
+        src = by_name.get(producer.operands[0])
+        if src is not None and src.rtype.strip().startswith("bf16"):
+            return True
+    if producer.opcode != "fusion":
+        return False
+    m = re.search(r"calls=%?([\w\.\-]+)", producer.attrs)
+    if not m:
+        return False
+    sub = comps.get(m.group(1), [])
+    return any(o.rtype.strip().startswith("bf16") for o in sub)
+
+
+def _payload_scale(
+    op: _Op, by_name: Dict[str, _Op], comps: Dict[str, List[_Op]]
+) -> float:
+    """0.5 if this f32 collective carries a semantically-bf16 payload."""
+    if not op.rtype.strip().startswith(("f32", "(f32")):
+        return 1.0
+    if not op.operands:
+        return 1.0
+    return 0.5 if _is_bf16_promoted(op.operands[0], by_name, comps) else 1.0
+
+
+def analyze_module(
+    comps: Dict[str, List[_Op]], *, pod_size: int = 10**9
+) -> HloCost:
+    memo: Dict[str, HloCost] = {}
+
+    def shapes_of(ops: List[_Op]) -> Dict[str, str]:
+        return {op.name: op.rtype for op in ops}
+
+    def cost_of(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # break cycles defensively
+        ops = comps.get(name, [])
+        table = shapes_of(ops)
+        consumers = _build_consumers(ops)
+        by_name = {op.name: op for op in ops}
+        total = HloCost()
+        for op in ops:
+            oc = op.opcode
+            if oc == "dot":
+                _, rdims = _first_shape(op.rtype)
+                lhs_type = table.get(op.operands[0], "") if op.operands else ""
+                _, ldims = _first_shape(lhs_type)
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+                k = 1
+                if m and ldims:
+                    for idx in m.group(1).split(","):
+                        if idx:
+                            k *= ldims[int(idx)]
+                total.flops += 2.0 * _numel(rdims) * k
+                rhs_type = table.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                # HBM proxy: operand/result bytes, discounted to bf16 where
+                # the f32 operand is a CPU-promoted bf16 value (see
+                # _is_bf16_promoted — the TPU target reads bf16)
+                lhs_scale = (
+                    0.5 if _is_bf16_promoted(op.operands[0], by_name, comps)
+                    else 1.0
+                ) if op.operands else 1.0
+                rhs_scale = (
+                    0.5 if len(op.operands) > 1 and _is_bf16_promoted(
+                        op.operands[1], by_name, comps) else 1.0
+                )
+                total.dot_bytes += (
+                    _all_shapes_bytes(op.rtype)
+                    + lhs_scale * _all_shapes_bytes(lhs_type)
+                    + rhs_scale * _all_shapes_bytes(rhs_type)
+                )
+            elif oc == "convolution":
+                _, rdims = _first_shape(op.rtype)
+                m = re.search(r"size=([\dx]+)", op.attrs)
+                window = 1
+                if m:
+                    for w in m.group(1).split("x"):
+                        window *= int(w)
+                total.flops += 2.0 * _numel(rdims) * window
+            elif oc.rstrip("-start") in _COLLECTIVES or oc in _COLLECTIVES:
+                base = oc[:-6] if oc.endswith("-start") else oc
+                if base not in _COLLECTIVES:
+                    continue
+                out_bytes = _all_shapes_bytes(op.rtype)
+                if oc.endswith("-start"):
+                    out_bytes /= 2.0  # tuple of (operand, result) buffers
+                if base == "all-reduce":
+                    if _ar_is_scatterable(op, consumers):
+                        wire = out_bytes  # TPU pipeline: AR+DS -> RS
+                    else:
+                        wire = 2.0 * out_bytes
+                elif base == "reduce-scatter":
+                    in_bytes = (
+                        _all_shapes_bytes(table.get(op.operands[0], ""))
+                        if op.operands
+                        else out_bytes
+                    )
+                    wire = in_bytes
+                else:
+                    wire = out_bytes
+                wire *= _payload_scale(op, by_name, comps)
+                total.coll[base] += wire
+                total.coll_count += 1
+                if _replica_groups_cross_pod(op.attrs, pod_size):
+                    total.dcn_bytes += wire
+                else:
+                    total.ici_bytes += wire
+            elif oc == "fusion" or oc == "call":
+                m = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.attrs)
+                if m:
+                    total.add(cost_of(m.group(1)))
+            elif oc == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                if mb:
+                    trips = _cond_trips(comps, mc.group(1)) if mc else 1
+                    total.add(cost_of(mb.group(1)).scaled(trips))
+            elif oc == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+                if m:
+                    branches = [
+                        b.strip().lstrip("%") for b in m.group(1).split(",")
+                    ]
+                    costs = [cost_of(b) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.coll_bytes)
+                        total.add(best)
+        memo[name] = total
+        return total
+
+    return cost_of("__entry__")
+
+
+def analyze_hlo_text(text: str, *, pod_size: int = 10**9) -> HloCost:
+    return analyze_module(_parse_computations(text), pod_size=pod_size)
+
+
+def top_collectives(
+    text: str, n: int = 20, *, pod_size: int = 10**9
+) -> List[Tuple[str, str, float, float]]:
+    """Largest collective contributors: (comp/op, kind, wire_bytes, multiplier).
+
+    Loop multipliers are propagated down to each op so the listed bytes are
+    whole-program contributions — the debugging view for the perf loop.
+    """
+    comps = _parse_computations(text)
+
+    # compute the total loop multiplier of each computation (entry = 1)
+    mult: Dict[str, float] = {"__entry__": 1.0}
+    order = ["__entry__"]
+    seen = {"__entry__"}
+    while order:
+        name = order.pop(0)
+        m = mult.get(name, 0.0)
+        for op in comps.get(name, []):
+            for attr_key in ("calls", "to_apply", "body"):
+                mm = re.search(rf"{attr_key}=%?([\w\.\-]+)", op.attrs)
+                if not mm:
+                    continue
+                child = mm.group(1)
+                k = 1.0
+                if attr_key == "body":
+                    mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                    k = _cond_trips(comps, mc.group(1)) if mc else 1.0
+                mult[child] = mult.get(child, 0.0) + m * k
+                if child not in seen:
+                    seen.add(child)
+                    order.append(child)
+
+    rows: List[Tuple[str, str, float, float]] = []
+    for cname, ops in comps.items():
+        if cname == "__entry__":
+            continue
+        k = mult.get(cname, 0.0)
+        if k <= 0 and cname != "__entry__":
+            continue
+        table = {op.name: op.rtype for op in ops}
+        consumers = _build_consumers(ops)
+        by_name = {op.name: op for op in ops}
+        for op in ops:
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base not in _COLLECTIVES:
+                continue
+            out_bytes = _all_shapes_bytes(op.rtype)
+            if op.opcode.endswith("-start"):
+                out_bytes /= 2.0
+            if base == "all-reduce":
+                if _ar_is_scatterable(op, consumers):
+                    base = "all-reduce(rs)"
+                    wire = out_bytes
+                else:
+                    wire = 2.0 * out_bytes
+            elif base == "reduce-scatter" and op.operands:
+                wire = _all_shapes_bytes(table.get(op.operands[0], ""))
+            else:
+                wire = out_bytes
+            scale = _payload_scale(op, by_name, comps)
+            if scale != 1.0:
+                base += "[bf16]"
+            rows.append((f"{cname}/{op.name}", base, wire * scale * k, k))
+    # entry-level ops too
+    for op in comps.get("__entry__", []):
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base in _COLLECTIVES:
+            out_bytes = _all_shapes_bytes(op.rtype)
+            wire = 2.0 * out_bytes if base == "all-reduce" else out_bytes
+            rows.append((f"entry/{op.name}", base, wire, 1.0))
+    rows.sort(key=lambda r: -r[2])
+    return rows[:n]

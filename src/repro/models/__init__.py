@@ -1,0 +1,22 @@
+"""Model substrate: layers, MoE, SSM, xLSTM, assembled LMs, registry."""
+
+from .params import Spec, abstract_params, init_params, logical_axes, tree_bytes
+from .registry import build_model, cache_specs, input_specs, make_batch
+from .transformer import DecoderLM, chunked_cross_entropy, pad_vocab
+from .encdec import EncDecLM
+
+__all__ = [
+    "Spec",
+    "abstract_params",
+    "init_params",
+    "logical_axes",
+    "tree_bytes",
+    "build_model",
+    "cache_specs",
+    "input_specs",
+    "make_batch",
+    "DecoderLM",
+    "EncDecLM",
+    "chunked_cross_entropy",
+    "pad_vocab",
+]

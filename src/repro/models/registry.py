@@ -1,0 +1,134 @@
+"""Model registry: ``ArchConfig`` -> model object + input specs.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of the given (arch x shape) cell — weak-type-correct,
+shardable, and never allocated.  This is the single source of truth for both
+the multi-pod dry-run and the smoke tests (which materialize the same specs
+with real arrays).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeConfig
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+__all__ = ["build_model", "input_specs", "make_batch", "cache_specs"]
+
+
+def build_model(cfg: ArchConfig):
+    return EncDecLM(cfg) if cfg.encdec else DecoderLM(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def _lm_train_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    specs = {
+        "tokens": i32(B, S),
+        "labels": i32(B, S),
+        "segment_ids": i32(B, S),
+        "positions": i32(B, S),
+    }
+    if cfg.frontend == "vision":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def _encdec_train_specs(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    i32 = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    Se, Sd = S // 2, S // 2
+    return {
+        "enc_embeds": jax.ShapeDtypeStruct((B, Se, cfg.d_model), jnp.bfloat16),
+        "enc_segment_ids": i32(B, Se),
+        "tokens": i32(B, Sd),
+        "labels": i32(B, Sd),
+        "segment_ids": i32(B, Sd),
+        "positions": i32(B, Sd),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.encdec:
+            return _encdec_train_specs(cfg, B, S)
+        return _lm_train_specs(cfg, B, S)
+    # decode: one new token against a cache of S
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    }
+    return specs
+
+
+def cache_specs(
+    cfg: ArchConfig, shape: ShapeConfig, dtype: Any = jnp.bfloat16
+) -> Any:
+    """ShapeDtypeStruct tree for the decode cache of one cell."""
+    model = build_model(cfg)
+    if cfg.encdec:
+        enc_len = max(shape.seq_len // 8, 128)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len, enc_len,
+                                     dtype=dtype)
+        )
+    else:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype=dtype)
+        )
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Materialized batches (smoke tests, examples)
+# ---------------------------------------------------------------------------
+
+
+def make_batch(
+    cfg: ArchConfig, shape_kind: str, B: int, S: int, seed: int = 0
+) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+
+    def tok(b, s):
+        return jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+
+    if cfg.encdec:
+        Se, Sd = S // 2, S // 2
+        return {
+            "enc_embeds": jnp.asarray(
+                rng.normal(size=(B, Se, cfg.d_model)) * 0.02, jnp.float32
+            ),
+            "enc_segment_ids": jnp.ones((B, Se), jnp.int32),
+            "tokens": tok(B, Sd),
+            "labels": tok(B, Sd),
+            "segment_ids": jnp.ones((B, Sd), jnp.int32),
+            "positions": jnp.broadcast_to(
+                jnp.arange(Sd, dtype=jnp.int32)[None], (B, Sd)
+            ),
+        }
+    batch = {
+        "tokens": tok(B, S),
+        "labels": tok(B, S),
+        "segment_ids": jnp.ones((B, S), jnp.int32),
+        "positions": jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+    }
+    if cfg.frontend == "vision":
+        nv = min(cfg.frontend_tokens, S)
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, nv, cfg.d_model)) * 0.02, jnp.float32
+        )
+    return batch

@@ -1,0 +1,196 @@
+"""Mamba-1 selective SSM block (jamba's 'M' layers).
+
+TPU adaptation notes (DESIGN.md §2): the CUDA selective-scan kernel fuses the
+(B, L, d_inner, d_state) state expansion in registers; here the recurrence
+runs as a chunked, remat-bounded ``lax.scan`` (``scan_utils.chunked_scan``)
+with ``d_inner`` sharded over the model axis (column-parallel in_proj,
+row-parallel out_proj), so the per-chip state slab stays in the MB range.
+Decode carries (conv window, ssm state) — O(1) per token, which is what makes
+jamba eligible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.context import constrain
+from .params import Spec
+from .scan_utils import chunked_scan
+
+__all__ = ["mamba_specs", "mamba_forward", "mamba_decode_step", "MambaState"]
+
+MambaState = Dict[str, jax.Array]  # {"conv": (B, k-1, di), "ssm": (B, di, ds)}
+
+
+def mamba_specs(cfg: Any) -> Dict[str, Spec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.inner(d)
+    r = s.rank(d)
+    ds = s.d_state
+    return {
+        "in_proj": Spec((d, 2 * di), ("embed", "mlp"), init="scaled"),
+        "conv_w": Spec((s.d_conv, di), (None, "mlp"), init="scaled", scale=1.0),
+        "conv_b": Spec((di,), ("mlp",), init="zeros"),
+        "x_proj": Spec((di, r + 2 * ds), ("mlp", None), init="scaled"),
+        "dt_proj": Spec((r, di), (None, "mlp"), init="scaled"),
+        "dt_bias": Spec((di,), ("mlp",), init="zeros"),
+        "A_log": Spec((di, ds), ("mlp", None), init="ones"),
+        "D": Spec((di,), ("mlp",), init="ones"),
+        "out_proj": Spec((di, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _causal_depthwise_conv(
+    x: jax.Array, w: jax.Array, b: jax.Array
+) -> jax.Array:
+    """x: (B, S, di), w: (k, di) depthwise causal conv.
+
+    Implemented as k shifted multiply-adds rather than
+    ``conv_general_dilated`` with ``feature_group_count=di``: the SPMD
+    partitioner shards grouped convs along *features* and all-gathers the
+    full global batch — measured 17 GB/device/layer on jamba train_4k
+    under the fsdp layout (EXPERIMENTS.md §Perf).  Elementwise shifts keep
+    whatever sharding the input has; FLOPs are identical (k multiply-adds
+    per element).
+    """
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[k - 1 - i]
+    return out + b
+
+
+def _ssm_scan(
+    dt: jax.Array,      # (B, S, di) softplus'd
+    x: jax.Array,       # (B, S, di) post-conv activations
+    Bmat: jax.Array,    # (B, S, ds)
+    Cmat: jax.Array,    # (B, S, ds)
+    A: jax.Array,       # (di, ds) negative
+    h0: jax.Array,      # (B, di, ds)
+    chunk_size: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan: h_t = exp(dt A) h + (dt x) B_t;  y_t = h_t . C_t."""
+
+    def step(h, xs):
+        dt_t, x_t, b_t, c_t = xs  # (B, di), (B, di), (B, ds), (B, ds)
+        a = jnp.exp(dt_t[..., None] * A[None])              # (B, di, ds)
+        inc = (dt_t * x_t)[..., None] * b_t[:, None, :]     # (B, di, ds)
+        h = a * h + inc
+        y = jnp.einsum("bds,bs->bd", h, c_t)                # (B, di)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(Cmat, 1, 0),
+    )
+    h, ys = chunked_scan(step, h0, xs, chunk_size=chunk_size)
+    return h, jnp.moveaxis(ys, 0, 1)  # (B, S, di)
+
+
+def mamba_forward(
+    p: Dict[str, jax.Array],
+    cfg: Any,
+    x: jax.Array,  # (B, S, d)
+    *,
+    state: MambaState = None,
+    chunk_size: int = 128,
+) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence Mamba block.  Returns (out, final_state)."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    di, ds = s.inner(cfg.d_model), s.d_state
+    r = s.rank(cfg.d_model)
+
+    xz = constrain(x @ p["in_proj"], ("batch", None, "mlp"))
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+        conv_out = _causal_depthwise_conv(conv_in, p["conv_w"], p["conv_b"])
+        conv_out = conv_out[:, state["conv"].shape[1]:]
+        h0 = state["ssm"]
+    else:
+        conv_out = _causal_depthwise_conv(x_in, p["conv_w"], p["conv_b"])
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+
+    xc = jax.nn.silu(conv_out)
+    dbc = xc @ p["x_proj"]  # (B, S, r + 2 ds)
+    dt_raw, Bmat, Cmat = jnp.split(dbc, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h, y = _ssm_scan(
+        dt.astype(jnp.float32),
+        xc.astype(jnp.float32),
+        Bmat.astype(jnp.float32),
+        Cmat.astype(jnp.float32),
+        A,
+        h0.astype(jnp.float32),
+        chunk_size,
+    )
+    y = (y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = {
+        "conv": x_in[:, -(s.d_conv - 1):].astype(jnp.float32)
+        if S >= s.d_conv - 1
+        else jnp.pad(x_in, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0))).astype(
+            jnp.float32
+        ),
+        "ssm": h,
+    }
+    return out, new_state
+
+
+def mamba_decode_step(
+    p: Dict[str, jax.Array],
+    cfg: Any,
+    x: jax.Array,       # (B, 1, d)
+    state: MambaState,  # conv window (B, k-1, di) + ssm state (B, di, ds)
+) -> Tuple[jax.Array, MambaState]:
+    """O(1) single-token Mamba step."""
+    s = cfg.ssm
+    r = s.rank(cfg.d_model)
+    ds = s.d_state
+
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B, 1, di)
+
+    window = jnp.concatenate(
+        [state["conv"].astype(x_in.dtype), x_in], axis=1
+    )  # (B, k, di)
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(conv)  # (B, di)
+
+    dbc = xc @ p["x_proj"]
+    dt_raw, Bmat, Cmat = jnp.split(dbc, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None])
+    inc = (dt * xc).astype(jnp.float32)[..., None] * Bmat.astype(jnp.float32)[
+        :, None, :
+    ]
+    h = a * state["ssm"] + inc
+    y = jnp.einsum("bds,bs->bd", h, Cmat.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = y[:, None, :] * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": window[:, 1:].astype(jnp.float32), "ssm": h}
+
+
+def mamba_init_state(cfg: Any, batch: int) -> MambaState:
+    s = cfg.ssm
+    di = s.inner(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), jnp.float32),
+        "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }

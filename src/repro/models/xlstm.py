@@ -1,0 +1,260 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows the xLSTM paper's exponential-gating formulation with the max-state
+stabilizer.  Both are sequence-recurrent and run through the chunked,
+remat-bounded scan (``scan_utils.chunked_scan``); the mLSTM's per-head state
+is a (dh x dh) matrix (linear-attention form), the sLSTM's a per-unit scalar
+triple.  Decode carries the states — O(1) per token, which makes the xlstm
+arch eligible for long_500k.
+
+Block structure (xLSTM paper Fig. 9/10, simplified):
+  mLSTM block: LN -> up-proj (2x) -> [path: causal conv -> silu -> q,k;  v]
+               -> mLSTM -> headwise RMS norm -> (* silu(gate)) -> down-proj
+  sLSTM block: LN -> sLSTM (recurrent gates with per-head hidden feedback)
+               -> headwise RMS norm -> gated FFN (factor 4/3)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import constrain
+from .layers import rms_norm
+from .params import Spec
+from .scan_utils import chunked_scan
+from .ssm import _causal_depthwise_conv
+
+__all__ = [
+    "mlstm_specs",
+    "mlstm_forward",
+    "mlstm_decode_step",
+    "mlstm_init_state",
+    "slstm_specs",
+    "slstm_forward",
+    "slstm_decode_step",
+    "slstm_init_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: Any) -> Tuple[int, int, int]:
+    du = int(cfg.xlstm.m_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = du // H
+    return du, H, dh
+
+
+def mlstm_specs(cfg: Any) -> Dict[str, Spec]:
+    d = cfg.d_model
+    du, H, dh = _mlstm_dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    return {
+        "up": Spec((d, 2 * du), ("embed", "mlp"), init="scaled"),
+        "conv_w": Spec((k, du), (None, "mlp"), init="scaled"),
+        "conv_b": Spec((du,), ("mlp",), init="zeros"),
+        "wq": Spec((du, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "wk": Spec((du, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "wv": Spec((du, H, dh), ("mlp", "heads", "head_dim"), init="scaled"),
+        "wi": Spec((du, H), ("mlp", "heads"), init="scaled"),
+        "wf": Spec((du, H), ("mlp", "heads"), init="scaled"),
+        "bi": Spec((H,), ("heads",), init="zeros"),
+        "bf": Spec((H,), ("heads",), init="ones"),  # bias toward remembering
+        "out_norm": Spec((dh,), ("head_dim",), init="zeros"),
+        "down": Spec((du, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _mlstm_scan(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,
+    v: jax.Array,
+    ig: jax.Array,  # (B, S, H) raw input-gate logits
+    fg: jax.Array,  # (B, S, H) raw forget-gate logits
+    state: Dict[str, jax.Array],
+    chunk_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, H, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        q_t, k_t, v_t, i_t, f_t = xs
+        logf = -jax.nn.softplus(-f_t)  # log sigmoid
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :] * scale
+        )
+        n = f_p[..., None] * n + i_p[..., None] * k_t * scale
+        num = jnp.einsum("bhij,bhj->bhi", C, q_t)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhj,bhj->bh", n, q_t)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (q, k, v, ig, fg)
+    )
+    carry, hs = chunked_scan(
+        step, (state["C"], state["n"], state["m"]), xs, chunk_size=chunk_size
+    )
+    C, n, m = carry
+    return jnp.moveaxis(hs, 0, 1), {"C": C, "n": n, "m": m}  # (B, S, H, dh)
+
+
+def mlstm_forward(
+    p: Dict[str, jax.Array],
+    cfg: Any,
+    x: jax.Array,
+    *,
+    state: Dict[str, jax.Array] = None,
+    chunk_size: int = 128,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    du, H, dh = _mlstm_dims(cfg)
+    up = constrain(x @ p["up"], ("batch", None, "mlp"))
+    xm, z = jnp.split(up, 2, axis=-1)  # (B, S, du)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+        conv_in = xm
+        trim = 0
+    else:
+        conv_in = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+        trim = state["conv"].shape[1]
+    c = _causal_depthwise_conv(conv_in, p["conv_w"], p["conv_b"])[:, trim:]
+    c = jax.nn.silu(c)
+
+    q = jnp.einsum("bsd,dhk->bshk", c, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", c, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"])
+    ig = jnp.einsum("bsd,dh->bsh", c, p["wi"]) + p["bi"]
+    fg = jnp.einsum("bsd,dh->bsh", c, p["wf"]) + p["bf"]
+
+    h, new_inner = _mlstm_scan(
+        q, k, v, ig, fg,
+        {"C": state["C"], "n": state["n"], "m": state["m"]},
+        chunk_size,
+    )
+    h = rms_norm(h, p["out_norm"]).reshape(B, S, du).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    kk = cfg.xlstm.conv_kernel - 1
+    conv_tail = (
+        xm[:, -kk:]
+        if S >= kk
+        else jnp.concatenate([state["conv"][:, S - kk:].astype(xm.dtype), xm], 1)
+    )
+    new_state = dict(new_inner, conv=conv_tail.astype(jnp.float32))
+    return out, new_state
+
+
+def mlstm_decode_step(
+    p: Dict[str, jax.Array], cfg: Any, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    return mlstm_forward(p, cfg, x, state=state, chunk_size=1)
+
+
+def mlstm_init_state(cfg: Any, batch: int) -> Dict[str, jax.Array]:
+    du, H, dh = _mlstm_dims(cfg)
+    kk = cfg.xlstm.conv_kernel - 1
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, kk, du), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: Any) -> Dict[str, Spec]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = int(cfg.xlstm.s_proj_factor * d)
+    return {
+        "wx": Spec((d, 4, H, dh), ("embed", None, "heads", "head_dim"), init="scaled"),
+        "wr": Spec((4, H, dh, dh), (None, "heads", "head_dim", None), init="scaled"),
+        "b": Spec((4, H, dh), (None, "heads", "head_dim"), init="zeros"),
+        "out_norm": Spec((dh,), ("head_dim",), init="zeros"),
+        "ffn_gate": Spec((d, dff), ("embed", "mlp"), init="scaled"),
+        "ffn_up": Spec((d, dff), ("embed", "mlp"), init="scaled"),
+        "ffn_down": Spec((dff, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _slstm_scan(
+    gx: jax.Array,  # (B, S, 4, H, dh) input contributions to i,f,z,o
+    wr: jax.Array,  # (4, H, dh, dh) recurrent weights
+    b: jax.Array,   # (4, H, dh)
+    state: Dict[str, jax.Array],
+    chunk_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    def step(carry, x_t):
+        c, n, h, m = carry  # each (B, H, dh)
+        rec = jnp.einsum("bhj,ghij->bghi", h, wr)  # (B, 4, H, dh)
+        g = x_t + rec + b
+        i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = -jax.nn.softplus(-f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(z_t)
+        n = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    xs = jnp.moveaxis(gx.astype(jnp.float32), 1, 0)
+    carry, hs = chunked_scan(
+        step,
+        (state["c"], state["n"], state["h"], state["m"]),
+        xs,
+        chunk_size=chunk_size,
+    )
+    c, n, h, m = carry
+    return jnp.moveaxis(hs, 0, 1), {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_forward(
+    p: Dict[str, jax.Array],
+    cfg: Any,
+    x: jax.Array,
+    *,
+    state: Dict[str, jax.Array] = None,
+    chunk_size: int = 128,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    gx = jnp.einsum("bsd,dghk->bsghk", x, p["wx"])  # (B, S, 4, H, dh)
+    h, new_state = _slstm_scan(gx, p["wr"], p["b"], state, chunk_size)
+    h = rms_norm(h, p["out_norm"]).reshape(B, S, d).astype(x.dtype)
+    # gated FFN (projection factor 4/3)
+    y = jax.nn.silu(h @ p["ffn_gate"]) * (h @ p["ffn_up"])
+    return y @ p["ffn_down"], new_state
+
+
+def slstm_decode_step(
+    p: Dict[str, jax.Array], cfg: Any, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    return slstm_forward(p, cfg, x, state=state, chunk_size=1)
+
+
+def slstm_init_state(cfg: Any, batch: int) -> Dict[str, jax.Array]:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}

@@ -1,0 +1,22 @@
+"""Shared test fixtures.
+
+NOTE: no ``XLA_FLAGS`` manipulation here — smoke tests and benchmarks must
+see the real single CPU device; only ``launch/dryrun.py`` (run as its own
+process) forces 512 host devices.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,247 @@
+"""Unit + property tests for the online bin-packing algorithms (paper Sec. IV).
+
+The hypothesis properties are the system's invariants:
+  - no bin ever exceeds its capacity,
+  - a new bin is opened only when no active bin fits (Any-Fit, Algorithm 1),
+  - First-Fit places each item in the lowest-index fitting bin,
+  - the O(n log m) segment-tree First-Fit is exactly equivalent to the O(nm)
+    scan version,
+  - bin counts respect lower_bound <= used <= R * OPT + c quality envelopes.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpack import (
+    ASYMPTOTIC_RATIO,
+    BestFit,
+    Bin,
+    FirstFit,
+    FirstFitDecreasing,
+    FirstFitTree,
+    Harmonic,
+    Item,
+    NextFit,
+    VectorFirstFit,
+    VectorItem,
+    WorstFit,
+    lower_bound,
+    make_packer,
+)
+
+sizes_strategy = st.lists(
+    st.floats(min_value=0.01, max_value=1.0, allow_nan=False), min_size=1, max_size=200
+)
+
+
+# ---------------------------------------------------------------------------
+# Basic construction / validation
+# ---------------------------------------------------------------------------
+
+
+def test_item_validation():
+    with pytest.raises(ValueError):
+        Item(0.0)
+    with pytest.raises(ValueError):
+        Item(1.5)
+    Item(1.0)  # boundary ok
+    Item(1e-6)
+
+
+def test_bin_overflow_raises():
+    b = Bin(1.0)
+    b.add(Item(0.7))
+    with pytest.raises(ValueError):
+        b.add(Item(0.5))
+    assert b.fits(0.3)
+    assert not b.fits(0.31)
+
+
+def test_oversized_item_raises():
+    ff = FirstFit(capacity=0.5)
+    with pytest.raises(ValueError):
+        ff.pack_one(Item(0.8))
+
+
+def test_make_packer_unknown():
+    with pytest.raises(ValueError):
+        make_packer("second-fit")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties
+# ---------------------------------------------------------------------------
+
+
+@given(sizes_strategy)
+@settings(max_examples=200, deadline=None)
+def test_firstfit_no_overflow_and_lowest_index(sizes):
+    ff = FirstFit()
+    for s in sizes:
+        idx = ff.pack_one(Item(s))
+        # no overflow
+        assert ff.bins[idx].used <= 1.0 + 1e-9
+        # First-Fit criterion: every lower-index bin could NOT have fit it
+        for j in range(idx):
+            assert ff.bins[j].used + s > 1.0 + 1e-9 or j == idx
+
+
+@given(sizes_strategy)
+@settings(max_examples=200, deadline=None)
+def test_anyfit_new_bin_only_when_needed(sizes):
+    """Algorithm 1: a new bin is generated only when no active bin fits."""
+    for cls in (FirstFit, BestFit, WorstFit):
+        packer = cls()
+        for s in sizes:
+            frees_before = [b.free for b in packer.bins]
+            n_before = len(packer.bins)
+            packer.pack_one(Item(s))
+            if len(packer.bins) > n_before:
+                assert all(f + 1e-9 < s for f in frees_before)
+
+
+@given(sizes_strategy)
+@settings(max_examples=300, deadline=None)
+def test_firstfit_tree_equivalence(sizes):
+    """The segment-tree First-Fit is decision-for-decision identical."""
+    ff, fft = FirstFit(), FirstFitTree()
+    for s in sizes:
+        assert ff.pack_one(Item(s)) == fft.pack_one(Item(s))
+    assert len(ff.bins) == len(fft.bins)
+    assert [b.used for b in ff.bins] == pytest.approx(
+        [b.used for b in fft.bins]
+    )
+
+
+@given(sizes_strategy)
+@settings(max_examples=200, deadline=None)
+def test_quality_envelopes(sizes):
+    """lower_bound <= bins_used; First-Fit <= 1.7*OPT + 2 (via LB <= OPT)."""
+    lb = lower_bound(sizes)
+    for name in ("first-fit", "best-fit", "worst-fit", "next-fit"):
+        packer = make_packer(name)
+        res = packer.pack([Item(s) for s in sizes])
+        assert res.num_bins >= lb
+        ratio = ASYMPTOTIC_RATIO[name]
+        # LB <= OPT, so R*LB + c is a valid (weaker) upper envelope
+        assert res.num_bins <= math.ceil(ratio * lb) + 2
+
+
+@given(sizes_strategy)
+@settings(max_examples=100, deadline=None)
+def test_ffd_no_worse_than_ff(sizes):
+    items = [Item(s) for s in sizes]
+    ff = FirstFit().pack(list(items))
+    ffd = FirstFitDecreasing().pack(list(items))
+    assert ffd.num_bins <= ff.num_bins
+    # all items assigned, nothing lost
+    assert len(ffd.assignments) == len(sizes)
+    total = sum(b.used for b in ffd.bins)
+    assert total == pytest.approx(sum(sizes))
+
+
+@given(sizes_strategy)
+@settings(max_examples=100, deadline=None)
+def test_harmonic_class_discipline(sizes):
+    """Harmonic(M): a bin of class k holds at most k items, all in class k."""
+    h = Harmonic(m=8)
+    for s in sizes:
+        h.pack_one(Item(s))
+    for b in h.bins:
+        assert b.used <= 1.0 + 1e-9
+        ks = {h._class_of(it.size) for it in b.items}
+        assert len(ks) == 1
+        (k,) = ks
+        assert len(b.items) <= k
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(min_value=0.0, max_value=1.0),
+            st.floats(min_value=0.01, max_value=1.0),
+        ),
+        min_size=1,
+        max_size=100,
+    ),
+    st.sampled_from(["first", "dot", "l2"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_vector_firstfit_feasibility(pairs, heuristic):
+    vff = VectorFirstFit(capacity=(1.0, 1.0), heuristic=heuristic)
+    for a, b in pairs:
+        if max(a, b) <= 0:
+            continue
+        vff.pack_one(VectorItem((a, b)))
+    for vb in vff.bins:
+        assert all(u <= c + 1e-9 for u, c in zip(vb.used, vb.capacity))
+
+
+def test_vector_item_validation():
+    with pytest.raises(ValueError):
+        VectorItem(())
+    with pytest.raises(ValueError):
+        VectorItem((0.0, 0.0))
+    with pytest.raises(ValueError):
+        VectorItem((1.2, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic examples
+# ---------------------------------------------------------------------------
+
+
+def test_firstfit_example():
+    """Hand-checked First-Fit run."""
+    ff = FirstFit()
+    res = ff.pack([Item(s) for s in (0.5, 0.7, 0.5, 0.2, 0.4, 0.2)])
+    #  0.5 -> bin0; 0.7 -> bin1; 0.5 -> bin0 (full); 0.2 -> bin1;
+    #  0.4 -> bin2; 0.2 -> bin2
+    assert res.assignments == [0, 1, 0, 1, 2, 2]
+    assert res.num_bins == 3
+
+
+def test_nextfit_only_looks_at_last():
+    nf = NextFit()
+    res = nf.pack([Item(0.6), Item(0.6), Item(0.3)])
+    # 0.6 -> bin0; 0.6 -> bin1 (bin0 not revisited); 0.3 -> bin1
+    assert res.assignments == [0, 1, 1]
+
+
+def test_bestfit_tightest_bin():
+    bf = BestFit()
+    bf.pack([Item(0.5), Item(0.7)])  # bins: free 0.5, free 0.3
+    idx = bf.pack_one(Item(0.25))
+    assert idx == 1  # tightest fit
+
+
+def test_worstfit_loosest_bin():
+    wf = WorstFit()
+    wf.pack([Item(0.5), Item(0.7)])
+    idx = wf.pack_one(Item(0.25))
+    assert idx == 0  # loosest fit
+
+
+def test_prefilled_bins():
+    """The IRM pre-fills bins with active workers' scheduled load."""
+    bins = [Bin(1.0, used=0.9), Bin(1.0, used=0.2)]
+    ff = FirstFit(bins=bins)
+    assert ff.pack_one(Item(0.5)) == 1
+    assert ff.pack_one(Item(0.05)) == 0
+
+
+def test_lower_bound():
+    assert lower_bound([]) == 0
+    assert lower_bound([0.5, 0.5]) == 1
+    assert lower_bound([0.5, 0.51]) == 2
+    assert lower_bound([1.0] * 5) == 5
+
+
+def test_tree_reset_and_regrowth():
+    fft = FirstFitTree()
+    fft.pack([Item(1.0) for _ in range(9)])  # forces several tree growths
+    assert len(fft.bins) == 9
+    fft.reset()
+    assert fft.pack_one(Item(0.5)) == 0

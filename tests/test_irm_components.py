@@ -1,0 +1,272 @@
+"""Unit tests for the IRM components: profiler, load predictor, queues,
+allocator (paper Section V)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import AllocatorConfig, BinPackingManager, idle_buffer
+from repro.core.load_predictor import LoadPredictor, LoadPredictorConfig
+from repro.core.profiler import MasterProfiler, ProfilerConfig, WorkerProbe
+from repro.core.queues import AllocationQueue, ContainerQueue, HostRequest
+
+
+# ---------------------------------------------------------------------------
+# Worker profiler (V-B.3)
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_default_guess():
+    p = MasterProfiler(ProfilerConfig(default_size=0.42))
+    assert p.estimate("never-seen") == 0.42
+    assert p.num_observations("never-seen") == 0
+
+
+def test_profiler_moving_average_window():
+    p = MasterProfiler(ProfilerConfig(window=4))
+    for v in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6):
+        p.observe("img", v)
+    # window of 4 -> mean of last four values
+    assert p.estimate("img") == pytest.approx((0.3 + 0.4 + 0.5 + 0.6) / 4)
+    assert p.num_observations("img") == 6
+
+
+def test_profiler_clamps_to_unit_interval():
+    p = MasterProfiler(ProfilerConfig(min_size=0.01, max_size=1.0))
+    p.observe("big", 3.7)
+    assert p.estimate("big") == 1.0
+    p.observe("tiny", 0.0)
+    assert p.estimate("tiny") == 0.01
+
+
+def test_profiler_report_ingest_and_snapshot():
+    p = MasterProfiler()
+    p.observe_report({"a": 0.5, "b": 0.25})
+    assert p.snapshot() == {"a": 0.5, "b": 0.25}
+    assert set(p.known_images()) == {"a", "b"}
+
+
+def test_worker_probe_per_image_means():
+    probe = WorkerProbe()
+    probe.sample([("a", 0.2), ("a", 0.4), ("b", 1.0)])
+    rep = probe.report()
+    assert rep["a"] == pytest.approx(0.3)
+    assert rep["b"] == pytest.approx(1.0)
+    # flushes
+    assert probe.report() == {}
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_profiler_estimate_bounded_by_window_extremes(vals):
+    p = MasterProfiler(ProfilerConfig(window=16))
+    for v in vals:
+        p.observe("x", v)
+    tail = vals[-16:]
+    est = p.estimate("x")
+    assert min(tail) - 1e-9 <= est or est == p.config.min_size
+    assert est <= max(max(tail), p.config.min_size) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Load predictor (V-B.4)
+# ---------------------------------------------------------------------------
+
+
+CFG = LoadPredictorConfig(
+    queue_low=8, queue_high=64, roc_low=1.0, roc_high=8.0,
+    small_increase=2, large_increase=8, read_interval=1.0, cooldown=5.0,
+)
+
+
+def test_case1_queue_very_long():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 0.0)  # establish baseline
+    d = lp.update(1.0, 100.0)
+    assert d.case == 1 and d.num_pes == 8
+
+
+def test_case1_roc_very_high():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 0.0)
+    d = lp.update(1.0, 10.0)  # roc = 10 >= 8
+    assert d.case == 1 and d.num_pes == 8
+
+
+def test_case2_moderate_roc_and_queue():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 6.0)  # below queue_low: no action, no cooldown
+    d = lp.update(4.0, 14.0)  # roc = 2 in [1, 8), queue 14 in [8, 64)
+    assert d.case == 2 and d.num_pes == 8
+
+
+def test_case3_roc_only():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 0.0)
+    d = lp.update(2.0, 4.0)  # roc = 2, queue 4 < 8
+    assert d.case == 3 and d.num_pes == 2
+
+
+def test_case4_queue_only():
+    lp = LoadPredictor(CFG)
+    d = lp.update(0.0, 10.0)  # first read: roc = 0, queue 10 >= 8
+    assert d.case == 4 and d.num_pes == 2
+
+
+def test_no_action_below_thresholds():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 2.0)
+    d = lp.update(1.0, 2.0)
+    assert d.case == 0 and d.num_pes == 0
+
+
+def test_cooldown_after_scaleup():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 0.0)
+    d = lp.update(1.0, 100.0)
+    assert d.num_pes > 0
+    # within the 5 s cooldown: no reads, no action
+    assert lp.update(3.0, 500.0).num_pes == 0
+    # after cooldown: reads again
+    d2 = lp.update(6.5, 500.0)
+    assert d2.num_pes > 0
+
+
+def test_read_interval_paced():
+    lp = LoadPredictor(CFG)
+    lp.update(0.0, 100.0)
+    # 0.5 s later: within read_interval -> noop even with a huge queue
+    assert lp.update(0.5, 200.0).num_pes == 0
+
+
+# ---------------------------------------------------------------------------
+# Container / allocation queues (V-B.1, V-B.2)
+# ---------------------------------------------------------------------------
+
+
+def test_container_queue_fifo_and_ttl():
+    q = ContainerQueue()
+    r1, r2 = HostRequest("a", ttl=2), HostRequest("b", ttl=2)
+    assert q.push(r1) and q.push(r2)
+    assert [r.image for r in q.drain()] == ["a", "b"]
+
+    # TTL requeue decrements and strips placement
+    r1.target_worker = 3
+    assert q.requeue(r1)
+    assert r1.ttl == 1 and r1.target_worker is None
+    assert q.requeue(r1) is False  # ttl 0 -> dropped
+    assert q.dropped == [r1]
+
+
+def test_container_queue_refresh_estimates():
+    q = ContainerQueue()
+    q.push(HostRequest("img", size_estimate=0.5))
+    prof = MasterProfiler()
+    prof.observe("img", 0.9)
+    q.refresh_estimates(prof)
+    assert next(iter(q)).size_estimate == pytest.approx(0.9)
+
+
+def test_push_front_preserves_order():
+    q = ContainerQueue()
+    a, b = HostRequest("a"), HostRequest("b")
+    q.push(HostRequest("c"))
+    q.push_front([a, b])
+    assert [r.image for r in q.drain()] == ["a", "b", "c"]
+
+
+def test_allocation_queue_requires_target():
+    aq = AllocationQueue()
+    with pytest.raises(ValueError):
+        aq.push(HostRequest("a"))
+
+
+def test_allocation_queue_consume_failure_path():
+    aq = AllocationQueue()
+    cq = ContainerQueue()
+    ok = HostRequest("ok", target_worker=0, ttl=3)
+    bad = HostRequest("bad", target_worker=9, ttl=3)
+    aq.push(ok)
+    aq.push(bad)
+    started = aq.consume(
+        try_start=lambda r: r.target_worker == 0, on_fail=cq.requeue
+    )
+    assert started == 1
+    assert len(aq) == 0
+    assert len(cq) == 1
+    requeued = cq.drain()[0]
+    assert requeued.image == "bad" and requeued.ttl == 2
+    assert requeued.target_worker is None  # stripped before requeue
+
+
+# ---------------------------------------------------------------------------
+# Bin-packing manager / allocator (V-B.2)
+# ---------------------------------------------------------------------------
+
+
+def test_idle_buffer_log_proportional():
+    assert idle_buffer(0) == 1
+    assert idle_buffer(1) == 1
+    assert idle_buffer(3) == 2
+    assert idle_buffer(7) == 3
+    assert idle_buffer(100) == math.ceil(math.log2(101))
+
+
+def test_packing_run_prefilled_workers():
+    mgr = BinPackingManager(AllocatorConfig(pack_interval=0.0, keep_idle_buffer=False))
+    reqs = [HostRequest("a", size_estimate=0.5) for _ in range(3)]
+    run = mgr.run(0.0, reqs, worker_loads=[0.8, 0.0])
+    # worker0 has 0.2 free -> first 0.5 lands on worker1, second on worker1,
+    # third opens worker2
+    assert [r.target_worker for r in run.placements] == [1, 1, 2]
+    assert run.num_bins == 3
+    assert run.target_workers == 3
+
+
+def test_packing_run_idle_buffer_added():
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=True))
+    run = mgr.run(0.0, [HostRequest("a", size_estimate=0.9)], worker_loads=[])
+    assert run.num_bins == 1
+    assert run.target_workers == 1 + idle_buffer(1)
+
+
+def test_packing_interval_gate():
+    mgr = BinPackingManager(AllocatorConfig(pack_interval=2.0))
+    assert mgr.should_run(0.0)
+    mgr.run(0.0, [], [])
+    assert not mgr.should_run(1.0)
+    assert mgr.should_run(2.0)
+
+
+def test_packing_rejects_non_anyfit():
+    mgr = BinPackingManager(AllocatorConfig(algorithm="harmonic"))
+    # Harmonic supports no pre-filled open bins -> must raise
+    with pytest.raises((ValueError, TypeError)):
+        mgr.run(0.0, [HostRequest("a")], worker_loads=[0.5])
+
+
+def test_headroom_caps_item_size():
+    mgr = BinPackingManager(
+        AllocatorConfig(keep_idle_buffer=False, headroom=0.1)
+    )
+    run = mgr.run(0.0, [HostRequest("a", size_estimate=1.0)], worker_loads=[])
+    # item clamped to 0.9 -> fits a bin with headroom
+    assert run.placements[0].target_worker == 0
+
+
+@given(
+    st.lists(st.floats(min_value=0.05, max_value=1.0), min_size=1, max_size=50),
+    st.lists(st.floats(min_value=0.0, max_value=1.0), max_size=5),
+)
+@settings(max_examples=100, deadline=None)
+def test_packing_run_never_overflows(sizes, loads):
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=False))
+    reqs = [HostRequest("x", size_estimate=s) for s in sizes]
+    run = mgr.run(0.0, reqs, worker_loads=loads)
+    for load in run.scheduled_load:
+        assert load <= 1.0 + 1e-9
+    assert all(r.target_worker is not None for r in run.placements)
+    assert run.ideal_bins <= run.num_bins or run.num_bins == len(
+        [l for l in loads if l > 0]
+    )

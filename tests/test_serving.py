@@ -1,0 +1,198 @@
+"""Tests for the paged KV cache (First-Fit page allocator) and the
+IRM-scheduled serving engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (
+    EngineConfig,
+    PageAllocator,
+    PagedCacheLayout,
+    ReplicaConfig,
+    Request,
+    ServingEngine,
+)
+
+
+def layout(num_pages=64, page_size=16, max_pages=32):
+    return PagedCacheLayout(
+        num_pages=num_pages, page_size=page_size, n_kv_heads=2, head_dim=8,
+        max_pages_per_seq=max_pages,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Page allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_first_fit_lowest_index():
+    a = PageAllocator(layout())
+    p1 = a.allocate(1, 32)  # 2 pages
+    assert p1 == [0, 1]
+    p2 = a.allocate(2, 16)
+    assert p2 == [2]
+    a.free(1)
+    # freed low pages are reused first (First-Fit keeps the pool dense)
+    p3 = a.allocate(3, 16)
+    assert p3 == [0]
+
+
+def test_allocator_extend_and_page_table():
+    a = PageAllocator(layout(page_size=4))
+    a.allocate(7, 4)          # 1 page
+    fresh = a.extend(7, 1)    # crosses a page boundary
+    assert len(fresh) == 1
+    assert a.seq_len(7) == 5
+    t = a.page_table([7])
+    assert t.shape == (1, 32)
+    assert (t[0, :2] >= 0).all() and (t[0, 2:] == -1).all()
+
+
+def test_allocator_exhaustion_returns_none():
+    a = PageAllocator(layout(num_pages=2, page_size=4, max_pages=8))
+    assert a.allocate(1, 8) is not None  # both pages
+    assert a.allocate(2, 1) is None      # pool exhausted
+    assert a.extend(1, 4) is None
+    a.free(1)
+    assert a.allocate(2, 1) is not None
+
+
+def test_allocator_max_pages_per_seq():
+    a = PageAllocator(layout(num_pages=64, page_size=4, max_pages=2))
+    assert a.allocate(1, 12) is None  # needs 3 pages > max 2
+
+
+def test_allocator_double_allocate_raises():
+    a = PageAllocator(layout())
+    a.allocate(1, 4)
+    with pytest.raises(KeyError):
+        a.allocate(1, 4)
+    with pytest.raises(KeyError):
+        a.extend(99)
+
+
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 100), st.booleans()),
+        min_size=1, max_size=60,
+    )
+)
+@settings(max_examples=100, deadline=None)
+def test_allocator_conservation(ops):
+    """Pages are conserved: used + free == num_pages, no double ownership."""
+    a = PageAllocator(layout(num_pages=32, page_size=8, max_pages=32))
+    live = {}
+    for i, (tokens, do_free) in enumerate(ops):
+        if do_free and live:
+            sid = next(iter(live))
+            a.free(sid)
+            del live[sid]
+        else:
+            pages = a.allocate(i, tokens)
+            if pages is not None:
+                live[i] = pages
+        # invariants
+        assert a.used_pages + a.free_pages == 32
+        owned = [p for pages in live.values() for p in pages]
+        assert len(owned) == len(set(owned))  # no double ownership
+        assert a.used_pages == len(owned)
+
+
+def test_allocator_utilization_watermark():
+    a = PageAllocator(layout(num_pages=16, page_size=8, max_pages=16))
+    a.allocate(1, 64)  # 8 pages
+    a.allocate(2, 8)
+    assert a.highest_used_page() == 9
+    a.free(1)
+    # only page 8 remains live -> watermark stays until reuse packs low again
+    assert a.highest_used_page() == 9
+    a.allocate(3, 8)
+    assert 0 in a.seq_pages(3)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine (continuous batching + IRM autoscaling)
+# ---------------------------------------------------------------------------
+
+
+ENGINE = EngineConfig(
+    replica=ReplicaConfig(
+        max_slots=4, kv_pages=256, page_size=16,
+        prefill_tokens_per_s=100_000.0, decode_tokens_per_s=4_000.0,
+        spinup_delay=2.0,
+    ),
+    max_replicas=4,
+    dt=0.1,
+)
+
+
+def make_requests(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt_len=int(rng.integers(64, 512)),
+            max_new_tokens=int(rng.integers(16, 128)),
+        )
+        for _ in range(n)
+    ]
+
+
+def test_engine_drains_all_requests():
+    eng = ServingEngine(ENGINE)
+    for r in make_requests(40):
+        eng.submit(r)
+    eng.run_until_drained(t_max=600.0)
+    assert len(eng.completed) == 40
+    s = eng.summary()
+    assert s["p50_latency"] > 0
+    assert s["p99_latency"] >= s["p50_latency"]
+
+
+def test_engine_scales_up_under_load_and_down_after():
+    eng = ServingEngine(ENGINE)
+    for r in make_requests(60, seed=1):
+        eng.submit(r)
+    eng.run_until_drained(t_max=600.0)
+    peak = max(m["replicas"] for m in eng.metrics)
+    assert peak > 1  # queue pressure triggered replica scale-up
+    assert eng.metrics[-1]["replicas"] <= peak
+
+
+def test_engine_respects_max_replicas():
+    eng = ServingEngine(ENGINE)
+    for r in make_requests(200, seed=2):
+        eng.submit(r)
+    for _ in range(2000):
+        eng.step()
+    assert max(m["replicas"] for m in eng.metrics) <= ENGINE.max_replicas
+
+
+def test_engine_profiler_learns_request_cost():
+    eng = ServingEngine(ENGINE)
+    reqs = make_requests(30, seed=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(t_max=600.0)
+    assert eng.profiler.num_observations("default") == 30
+    learned = eng.profiler.estimate("default")
+    rc = ENGINE.replica
+    true_mean = np.mean(
+        [min(1.0, r.total_tokens / (rc.kv_pages * rc.page_size)) for r in reqs]
+    )
+    assert learned == pytest.approx(true_mean, rel=0.3)
+
+
+def test_engine_admission_never_overflows_slots():
+    eng = ServingEngine(ENGINE)
+    for r in make_requests(100, seed=4):
+        eng.submit(r)
+    for _ in range(1500):
+        eng.step()
+        for rep in eng.backend.replicas:
+            if not rep.retired:
+                assert (
+                    len(rep.active) + len(rep.prefilling)
+                    <= ENGINE.replica.max_slots
+                )

@@ -1,0 +1,235 @@
+"""Training substrate tests: optimizer, microbatching, gradient compression,
+checkpointing, and the fault-tolerant controller."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.distributed import GradCompressor
+from repro.models import build_model, init_params, make_batch
+from repro.training import (
+    OptimizerConfig,
+    init_opt_state,
+    lr_at,
+    make_train_step,
+)
+from repro.training.controller import TrainController, TrainControllerConfig
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("olmo-1b").smoke()
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def batches(cfg, n, B=2, S=64):
+    for i in range(n):
+        yield make_batch(cfg, "train", B, S, seed=i)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=1e-2)
+    assert lrs[-1] == pytest.approx(1e-4, rel=5e-2)  # min_lr floor
+    # warmup is monotone increasing
+    warm = [float(lr_at(cfg, jnp.asarray(s))) for s in range(11)]
+    assert all(b >= a for a, b in zip(warm, warm[1:]))
+
+
+def test_loss_decreases_over_steps(tiny):
+    cfg, model, params = tiny
+    step = jax.jit(make_train_step(model, OptimizerConfig(
+        learning_rate=3e-3, warmup_steps=2, decay_steps=50)))
+    opt = init_opt_state(params)
+    fixed = make_batch(cfg, "train", 2, 64, seed=0)
+    losses = []
+    for _ in range(12):
+        params, opt, m = step(params, opt, fixed)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_grad_clipping_caps_update(tiny):
+    cfg, model, params = tiny
+    from repro.training.optimizer import adamw_update, global_norm
+
+    grads = jax.tree.map(lambda p: 100.0 * jnp.ones_like(p), params)
+    opt = init_opt_state(params)
+    _, _, metrics = adamw_update(params, grads, opt,
+                                 OptimizerConfig(grad_clip_norm=1.0))
+    assert float(metrics["grad_norm"]) > 1.0  # pre-clip norm reported
+
+
+def test_microbatching_matches_full_batch(tiny):
+    """grad accumulation over 4 microbatches == single-shot batch."""
+    cfg, model, params = tiny
+    batch = make_batch(cfg, "train", 8, 64, seed=0)
+    opt1 = init_opt_state(params)
+    opt4 = init_opt_state(params)
+    step1 = jax.jit(make_train_step(model, OptimizerConfig(), microbatches=1))
+    step4 = jax.jit(make_train_step(model, OptimizerConfig(), microbatches=4))
+    p1, _, m1 = step1(params, opt1, batch)
+    p4, _, m4 = step4(params, opt4, batch)
+    # CE is a mean over tokens; microbatch slices have equal token counts
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4
+    )
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_microbatch_indivisible_raises(tiny):
+    cfg, model, params = tiny
+    batch = make_batch(cfg, "train", 2, 64, seed=0)
+    step = make_train_step(model, OptimizerConfig(), microbatches=3)
+    with pytest.raises(ValueError):
+        step(params, init_opt_state(params), batch)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_compressor_bounded_quant_error():
+    comp = GradCompressor(stochastic=False)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    deq, err = comp.apply(g, None)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(g["w"] - deq["w"]))) <= scale * 0.5 + 1e-6
+    # error feedback state holds exactly the residual
+    np.testing.assert_allclose(
+        np.asarray(err["w"]), np.asarray(g["w"] - deq["w"]), rtol=1e-6,
+        atol=1e-7,
+    )
+
+
+def test_compressor_error_feedback_is_unbiased_over_time():
+    """Accumulated dequantized sum tracks the true gradient sum."""
+    comp = GradCompressor(stochastic=False)
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32) * 1e-3
+    ef = None
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, ef = comp.apply({"w": g_true}, {"w": ef["w"]} if ef else None)
+        total = total + deq["w"]
+    np.testing.assert_allclose(
+        np.asarray(total), np.asarray(50 * g_true), rtol=0.05, atol=1e-4
+    )
+
+
+def test_training_with_compression_converges(tiny):
+    cfg, model, params = tiny
+    step = jax.jit(make_train_step(
+        model, OptimizerConfig(learning_rate=3e-3, warmup_steps=2),
+        compressor=GradCompressor(stochastic=False),
+    ))
+    opt = init_opt_state(params)
+    opt["ef"] = None
+    fixed = make_batch(cfg, "train", 2, 64, seed=0)
+    losses = []
+    opt.pop("ef")
+    state = dict(opt)
+    for _ in range(10):
+        params, state, m = step(params, state, fixed)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny):
+    cfg, model, params = tiny
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, {"p": params})
+    restored = mgr.restore(10, {"p": params})
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["p"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path, tiny):
+    _, _, params = tiny
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"p": params})
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_save(tmp_path, tiny):
+    _, _, params = tiny
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(7, {"p": params})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    restored = mgr.restore(7, {"p": params})
+    assert jax.tree.structure(restored) == jax.tree.structure({"p": params})
+
+
+def test_checkpoint_checksum_detects_corruption(tmp_path, tiny):
+    _, _, params = tiny
+    mgr = CheckpointManager(str(tmp_path))
+    path = mgr.save(1, {"p": params})
+    # corrupt one leaf file
+    victim = next(f for f in os.listdir(path) if f.endswith(".npy"))
+    arr = np.load(os.path.join(path, victim))
+    arr_bytes = arr.ravel()
+    arr_bytes[0] += 1.0
+    np.save(os.path.join(path, victim), arr)
+    with pytest.raises(IOError):
+        mgr.restore(1, {"p": params})
+
+
+def test_controller_restarts_after_injected_failure(tmp_path, tiny):
+    cfg, model, params = tiny
+    step = jax.jit(make_train_step(model, OptimizerConfig(learning_rate=1e-3)))
+    ctl = TrainController(step, TrainControllerConfig(
+        checkpoint_dir=str(tmp_path), checkpoint_every=3,
+        async_checkpoint=False,
+    ))
+    opt = init_opt_state(params)
+    p, o, summary = ctl.run(
+        params, opt, batches(cfg, 30), num_steps=10, fail_at=7,
+    )
+    assert summary["restarts"] == 1
+    assert summary["final_step"] == 10
+    assert int(o["step"]) >= 9  # restarted from step 6 checkpoint, refinished
+
+
+def test_controller_cold_start_and_resume(tmp_path, tiny):
+    cfg, model, params = tiny
+    step = jax.jit(make_train_step(model, OptimizerConfig()))
+    cfg_ctl = TrainControllerConfig(
+        checkpoint_dir=str(tmp_path), checkpoint_every=5,
+        async_checkpoint=False,
+    )
+    ctl = TrainController(step, cfg_ctl)
+    opt = init_opt_state(params)
+    p, o, _ = ctl.run(params, opt, batches(cfg, 10), num_steps=5)
+    # a new controller (fresh process) resumes from the checkpoint
+    ctl2 = TrainController(step, cfg_ctl)
+    p2, o2, start = ctl2.init_state(lambda: (params, init_opt_state(params)))
+    assert start == 5
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(p)[0]), np.asarray(jax.tree.leaves(p2)[0])
+    )
