@@ -12,20 +12,17 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import SimConfig, simulate, synthetic_workload
+from repro.core import simulate
+from repro.scenarios import get_scenario
 
-SIM = SimConfig(
-    dt=0.5, cores_per_worker=8, max_workers=5,
-    worker_boot_delay=15.0, pe_start_delay=2.5,
-    container_idle_timeout=1.0, report_interval=1.0,
-    t_max=1500.0, seed=0,
-)
+SCENARIO = get_scenario("synthetic")
+SIM = SCENARIO.sim_config()
 
 
 def run(out_dir: str) -> Dict:
     from .common import dump_csv, dump_json
 
-    stream = synthetic_workload(seed=0)
+    stream = SCENARIO.make_stream(0)
     res = simulate(stream, SIM)
 
     rows = [

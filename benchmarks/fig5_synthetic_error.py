@@ -12,15 +12,15 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import SimConfig, simulate, synthetic_workload
+from repro.core import simulate
 
-from .fig3_4_synthetic_utilization import SIM
+from .fig3_4_synthetic_utilization import SCENARIO, SIM
 
 
 def run(out_dir: str) -> Dict:
     from .common import dump_csv, dump_json
 
-    res = simulate(synthetic_workload(seed=0), SIM)
+    res = simulate(SCENARIO.make_stream(0), SIM)
     err = res.error  # (T, W) percentage points
 
     W = err.shape[1]

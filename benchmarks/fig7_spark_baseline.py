@@ -15,27 +15,18 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import (
-    SimConfig,
-    SparkConfig,
-    simulate,
-    simulate_spark,
-    usecase_workload,
-)
+from repro.core import SparkConfig, simulate, simulate_spark
+from repro.scenarios import get_scenario
 
-HIO_SIM = SimConfig(
-    dt=0.5, cores_per_worker=8, max_workers=5,
-    worker_boot_delay=15.0, pe_start_delay=2.5,
-    container_idle_timeout=1.0, report_interval=1.0,
-    t_max=3600.0, seed=0,
-)
+SCENARIO = get_scenario("microscopy")
+HIO_SIM = SCENARIO.sim_config()
 
 
 def run(out_dir: str) -> Dict:
     from .common import dump_csv, dump_json
 
-    stream = usecase_workload(seed=0)  # 767 images, 10-20 s each
-    spark = simulate_spark(usecase_workload(seed=0), SparkConfig())
+    stream = SCENARIO.make_stream(0)  # 767 images, 10-20 s each
+    spark = simulate_spark(SCENARIO.make_stream(0), SparkConfig())
     hio = simulate(stream, HIO_SIM)
 
     dump_csv(

@@ -20,26 +20,20 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import IRM, IRMConfig, SimConfig, simulate, usecase_workload
+from repro.scenarios import get_scenario, run_scenario
 
-SIM = SimConfig(
-    dt=0.5, cores_per_worker=8, max_workers=5,
-    worker_boot_delay=15.0, pe_start_delay=2.5,
-    container_idle_timeout=1.0, report_interval=1.0,
-    t_max=3600.0, seed=0,
-)
-N_RUNS = 10
+SCENARIO = get_scenario("microscopy")
+SIM = SCENARIO.sim_config()
+N_RUNS = SCENARIO.n_runs
 
 
 def run(out_dir: str) -> Dict:
     from .common import dump_csv, dump_json
 
-    irm = IRM(IRMConfig())
-    makespans = []
-    res = None
-    for i in range(N_RUNS):
-        res = simulate(usecase_workload(seed=i), SIM, irm=irm)
-        makespans.append(float(res.makespan))
+    # 10 back-to-back runs with one persistent IRM (stream seeds 0..9)
+    result = run_scenario(SCENARIO)
+    res = result.final
+    makespans = result.makespans
 
     W = SIM.max_workers
     dump_csv(

@@ -12,7 +12,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.serving import EngineConfig, ReplicaConfig, Request, ServingEngine
+from repro.scenarios import run_serving_scenario
+from repro.serving import EngineConfig, ReplicaConfig
 
 CFG = EngineConfig(
     replica=ReplicaConfig(
@@ -28,32 +29,22 @@ CFG = EngineConfig(
 def run(out_dir: str) -> Dict:
     from .common import dump_csv, dump_json
 
-    rng = np.random.default_rng(0)
-    eng = ServingEngine(CFG)
-
-    # steady trickle + two bursts (the paper's two peaks)
-    schedule = []
-    for t in np.arange(0.0, 60.0, 2.0):
-        schedule.append((float(t), 1))
-    for burst_t in (15.0, 40.0):
-        schedule.append((burst_t, 40))
-    schedule.sort()
-
-    idx = 0
-    while eng.t < 400.0:
-        while idx < len(schedule) and schedule[idx][0] <= eng.t:
-            for _ in range(schedule[idx][1]):
-                eng.submit(Request(
-                    prompt_len=int(rng.integers(128, 1024)),
-                    max_new_tokens=int(rng.integers(32, 256)),
-                ))
-            idx += 1
-        eng.step()
-        if idx >= len(schedule) and not eng.queue and all(
-            not r.active and not r.prefilling
-            for r in eng.backend.replicas if not r.retired
-        ):
-            break
+    # the registry's bursty shape, sized to the old hand-rolled schedule: a
+    # steady trickle plus the paper's two deterministic peaks over a minute
+    result = run_serving_scenario(
+        "bursty",
+        stream_overrides=dict(
+            t_end=60.0, trickle_interval=2.0, trickle_size=(1, 1),
+            burst_times=(15.0, 40.0), burst_size=(40, 40),
+            duration_range=(2.0, 16.0),
+        ),
+        engine_cfg=CFG,
+        time_scale=1.0,
+        t_max=400.0,
+        request_kwargs=dict(prompt_tokens_per_s=64.0,
+                            decode_tokens_per_s=16.0),
+    )
+    eng = result["engine"]
 
     dump_csv(
         out_dir, "serving_autoscale.csv",
@@ -75,7 +66,7 @@ def run(out_dir: str) -> Dict:
         "final_replicas": int(replicas[-1]),
         "claim_scales_up_on_burst": bool(replicas.max() >= 3),
         "claim_scales_back_down": bool(replicas[-1] < replicas.max()),
-        "total_submitted": int(sum(n for _, n in schedule)),
+        "total_submitted": int(result["submitted"]),
     }
     dump_json(out_dir, "serving_autoscale.json", summary)
     return summary

@@ -28,8 +28,8 @@ from repro.core import (
     HostRequest,
     SimConfig,
     simulate,
-    usecase_workload,
 )
+from repro.scenarios import get_scenario
 from repro.distributed import param_shardings
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model, init_params, make_batch
@@ -86,7 +86,9 @@ def scenario_3_worker_failure() -> None:
     print("=" * 64)
     print("3. Worker VM failure mid-stream (messages requeued, run completes)")
     print("=" * 64)
-    stream = usecase_workload(seed=0, n_images=80, duration_range=(4.0, 8.0))
+    stream = get_scenario("microscopy").make_stream(
+        0, n_images=80, duration_range=(4.0, 8.0)
+    )
     res = simulate(stream, SimConfig(
         dt=0.5, cores_per_worker=4, max_workers=5,
         worker_boot_delay=5.0, pe_start_delay=1.0, t_max=1500.0,

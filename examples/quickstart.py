@@ -12,15 +12,9 @@ Usage:
 
 import numpy as np
 
-from repro.core import (
-    FirstFit,
-    Item,
-    SimConfig,
-    lower_bound,
-    simulate,
-    usecase_workload,
-)
+from repro.core import FirstFit, Item, SimConfig, lower_bound, simulate
 from repro.data import pack_documents, packing_efficiency, synthetic_documents
+from repro.scenarios import get_scenario
 
 
 def demo_binpacking() -> None:
@@ -44,7 +38,9 @@ def demo_irm_simulation() -> None:
     print("=" * 64)
     print("2. IRM scheduling the microscopy stream (paper Section VI-B)")
     print("=" * 64)
-    stream = usecase_workload(seed=0, n_images=120, duration_range=(5.0, 10.0))
+    stream = get_scenario("microscopy").make_stream(
+        0, n_images=120, duration_range=(5.0, 10.0)
+    )
     res = simulate(
         stream,
         SimConfig(dt=0.5, cores_per_worker=8, max_workers=5,

@@ -1,132 +1,22 @@
-"""Workload generators for the two evaluation scenarios in the paper.
+"""Backward-compatibility shim — the generators moved to ``repro.scenarios``.
 
-Section VI-A (synthetic): four workload classes, all targeting 100% CPU (of
-one core) for various durations, "streamed in regular small batches of jobs
-and two peaks of large batches to introduce different levels of intensity in
-pressure to the IRM".
+The paper's two workloads (Section VI-A synthetic batches, Section VI-B
+microscopy use case) now live in ``repro.scenarios.streams`` next to the
+extended traffic shapes (bursty, diurnal, heavy-tailed, multi-tenant), and
+are registered in the scenario catalogue (``repro.scenarios.registry``).
 
-Section VI-B (use case): 767 microscopy images processed by a CellProfiler
-pipeline, each invocation taking 10–20 seconds, streamed as a single large
-batch with randomized order (10 runs; the profiler persists across runs).
+Import from ``repro.scenarios`` in new code; this module keeps the historic
+``repro.core.workloads`` import path working for the sim, the Spark
+baseline, and existing tests.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Dict, List, Tuple
-
-import numpy as np
+from ..scenarios.streams import (  # noqa: F401
+    Message,
+    Stream,
+    synthetic_workload,
+    usecase_workload,
+)
 
 __all__ = ["Message", "Stream", "synthetic_workload", "usecase_workload"]
-
-_msg_ids = itertools.count()
-
-
-@dataclasses.dataclass
-class Message:
-    """One stream message: data to process + the container image to run.
-
-    ``cpu_cores`` is the CPU draw while processing, in cores; ``duration`` is
-    the processing time in seconds.
-    """
-
-    image: str
-    duration: float
-    cpu_cores: float = 1.0
-    arrival: float = 0.0
-    msg_id: int = dataclasses.field(default_factory=lambda: next(_msg_ids))
-    # bookkeeping filled in by the sim
-    start_t: float = -1.0
-    done_t: float = -1.0
-
-
-@dataclasses.dataclass
-class Stream:
-    """A time-ordered schedule of message batches."""
-
-    batches: List[Tuple[float, List[Message]]]
-
-    @property
-    def num_messages(self) -> int:
-        return sum(len(msgs) for _, msgs in self.batches)
-
-    @property
-    def images(self) -> List[str]:
-        seen: Dict[str, None] = {}
-        for _, msgs in self.batches:
-            for m in msgs:
-                seen.setdefault(m.image, None)
-        return list(seen)
-
-    def horizon(self) -> float:
-        return max(t for t, _ in self.batches) if self.batches else 0.0
-
-
-def synthetic_workload(
-    seed: int = 0,
-    *,
-    t_end: float = 480.0,
-    batch_interval: float = 12.0,
-    batch_size: Tuple[int, int] = (3, 7),
-    peak_times: Tuple[float, ...] = (120.0, 330.0),
-    peak_size: int = 48,
-) -> Stream:
-    """Paper Section VI-A: periodic small batches plus two large peaks.
-
-    Four synthetic classes all busy one core at ~100%, with durations
-    5 / 10 / 20 / 40 s ("various amounts of time").
-    """
-    rng = np.random.default_rng(seed)
-    classes = [
-        ("synthetic/cpu100-d5", 5.0),
-        ("synthetic/cpu100-d10", 10.0),
-        ("synthetic/cpu100-d20", 20.0),
-        ("synthetic/cpu100-d40", 40.0),
-    ]
-
-    def make_msgs(n: int, t: float) -> List[Message]:
-        idx = rng.integers(0, len(classes), size=n)
-        out = []
-        for i in idx:
-            image, dur = classes[int(i)]
-            jitter = float(rng.uniform(0.9, 1.1))
-            out.append(
-                Message(image=image, duration=dur * jitter, cpu_cores=1.0, arrival=t)
-            )
-        return out
-
-    batches: List[Tuple[float, List[Message]]] = []
-    t = 0.0
-    while t < t_end:
-        n = int(rng.integers(batch_size[0], batch_size[1] + 1))
-        batches.append((t, make_msgs(n, t)))
-        t += batch_interval
-    for pt in peak_times:
-        batches.append((pt, make_msgs(peak_size, pt)))
-    batches.sort(key=lambda b: b[0])
-    return Stream(batches=batches)
-
-
-def usecase_workload(
-    seed: int = 0,
-    *,
-    n_images: int = 767,
-    duration_range: Tuple[float, float] = (10.0, 20.0),
-    image: str = "haste/cellprofiler:3.1.9",
-) -> Stream:
-    """Paper Section VI-B: the CellProfiler microscopy batch.
-
-    The entire collection is streamed as a single batch; per-image analysis
-    takes 10–20 s ("Due to variations in the images they take varying
-    amounts of time to process").  The streaming order is randomized per run
-    (the ``seed``).
-    """
-    rng = np.random.default_rng(seed)
-    durations = rng.uniform(duration_range[0], duration_range[1], size=n_images)
-    rng.shuffle(durations)  # randomized streaming order
-    msgs = [
-        Message(image=image, duration=float(d), cpu_cores=1.0, arrival=0.0)
-        for d in durations
-    ]
-    return Stream(batches=[(0.0, msgs)])

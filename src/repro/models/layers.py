@@ -356,7 +356,13 @@ def decode_attention_distributed(
     shard the cache sequence (callers fall back to the dense path).
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    try:  # jax >= 0.6: top-level export, replication check named check_vma
+        from jax import shard_map
+        _sm_kwargs = {"check_vma": False}
+    except ImportError:  # jax 0.4/0.5: experimental path, check_rep
+        from jax.experimental.shard_map import shard_map
+        _sm_kwargs = {"check_rep": False}
 
     from ..distributed.context import _STATE  # same-module convention
 
@@ -398,7 +404,7 @@ def decode_attention_distributed(
         mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, len_spec),
         out_specs=q_spec,
-        check_vma=False,
+        **_sm_kwargs,
     )(q, k_cache, v_cache, jnp.asarray(cache_len).reshape(B))
 
 

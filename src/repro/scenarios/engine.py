@@ -1,0 +1,149 @@
+"""Scenario runner: drive a registered scenario through the IRM simulation.
+
+One entry point — ``run_scenario`` — replaces the hand-rolled driver loops
+the benchmarks used to carry: it builds the scenario's stream(s), applies a
+packing policy (any ``make_packer`` name), keeps the IRM profiler alive
+across the scenario's runs (the paper's 10-run persistence), and reduces
+the recorded time series to the same summary metrics the paper's figures
+report (utilization, scheduled-vs-measured error, worker targets).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from ..core.binpack import make_packer
+from ..core.irm import IRM
+from ..core.sim import SimResult, simulate
+from .registry import Scenario, get_scenario
+
+__all__ = ["ScenarioResult", "run_scenario", "summarize_result", "POLICIES", "ACTIVE_THRESHOLD"]
+
+# Packing policies the CLI sweeps; every name resolves via make_packer.
+POLICIES = ("first-fit", "first-fit-tree", "best-fit", "worst-fit", "next-fit",
+            "harmonic")
+
+# Activity threshold shared with the seed benchmarks and the library's
+# expectation checks (a worker counts as scheduled when its packed load
+# exceeds 5% of capacity).
+ACTIVE_THRESHOLD = 0.05
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Outcome of running one scenario under one packing policy."""
+
+    scenario: str
+    policy: str
+    runs: List[SimResult]
+    makespans: List[float]
+    summary: Dict[str, float]
+    expectations: Dict[str, bool]
+
+    @property
+    def final(self) -> SimResult:
+        """The last run — what the paper plots (its Figs. 8-10 use run 10)."""
+        return self.runs[-1]
+
+    @property
+    def ok(self) -> bool:
+        return all(self.expectations.values())
+
+
+def summarize_result(res: SimResult, dt: float) -> Dict[str, float]:
+    """Reduce one run's time series to the figures' summary metrics."""
+    active = res.scheduled_cpu > ACTIVE_THRESHOLD
+    err = res.error  # percentage points, (T, W)
+    err_active = err[active]
+    per_worker_load = res.scheduled_cpu.sum(axis=0) * dt  # worker-seconds
+    w = len(per_worker_load)
+    low = float(per_worker_load[: w // 2 + 1].sum())
+    high = float(per_worker_load[w // 2 + 1:].sum())
+    return {
+        "completed": int(res.completed),
+        "total": int(res.total),
+        "makespan_s": float(res.makespan),
+        "mean_scheduled_utilization_active": float(
+            res.scheduled_cpu[active].mean()
+        ) if active.any() else 0.0,
+        "mean_busy_utilization": res.mean_busy_utilization(),
+        "mean_error_pp": float(err_active.mean()) if err_active.size else 0.0,
+        "mean_abs_error_pp": float(np.abs(err_active).mean())
+        if err_active.size else 0.0,
+        "p95_abs_error_pp": float(np.percentile(np.abs(err_active), 95))
+        if err_active.size else 0.0,
+        "per_worker_load_s": [float(x) for x in per_worker_load],
+        "low_index_load_fraction": low / max(low + high, 1e-9),
+        "max_active_workers": int(res.active_workers.max()),
+        "max_target_workers": int(res.target_workers.max()),
+        "peak_queue_len": int(res.queue_len.max()),
+        "peak_pe_count": int(res.pe_count.max()),
+    }
+
+
+def run_scenario(
+    scenario: Union[str, Scenario],
+    *,
+    policy: Optional[str] = None,
+    base_seed: int = 0,
+    n_runs: Optional[int] = None,
+    stream_overrides: Optional[Dict[str, object]] = None,
+    t_max: Optional[float] = None,
+    irm: Optional[IRM] = None,
+) -> ScenarioResult:
+    """Run a scenario end to end and evaluate its expectations.
+
+    ``policy`` overrides the packing algorithm inside the scenario's IRM
+    config (any ``make_packer`` name); ``None`` keeps the scenario default.
+    Runs ``n_runs`` back-to-back simulations with stream seeds
+    ``base_seed + i``, reusing one IRM so the profiler state persists across
+    runs exactly as in the paper's repeated-run experiment.  ``t_max`` and
+    ``stream_overrides`` shrink or grow the experiment (smoke runs, sweeps).
+    """
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    irm_cfg = scn.irm_config()
+    if policy is not None:
+        if irm is not None:
+            raise ValueError(
+                "policy and irm are mutually exclusive: a pre-built IRM "
+                "carries its own packing configuration"
+            )
+        make_packer(policy)  # validate the name before mutating the config
+        irm_cfg.allocator.algorithm = policy
+    if irm is None:
+        irm = IRM(irm_cfg)
+    else:
+        irm_cfg = irm.config
+
+    sim_cfg = scn.sim_config()
+    if t_max is not None:
+        sim_cfg = dataclasses.replace(sim_cfg, t_max=float(t_max))
+
+    runs: List[SimResult] = []
+    makespans: List[float] = []
+    n = n_runs if n_runs is not None else scn.n_runs
+    overrides = stream_overrides or {}
+    for i in range(n):
+        stream = scn.make_stream(base_seed + i, **overrides)
+        res = simulate(stream, sim_cfg, irm=irm)
+        runs.append(res)
+        makespans.append(float(res.makespan))
+
+    summary = summarize_result(runs[-1], sim_cfg.dt)
+    summary["makespans_s"] = makespans
+    if len(makespans) > 1:
+        summary["run1_vs_best_profiled"] = float(
+            makespans[0] / max(min(makespans[1:]), 1e-9)
+        )
+    expectations = {e.name: e.evaluate(runs[-1]) for e in scn.expectations}
+    return ScenarioResult(
+        scenario=scn.name,
+        policy=policy or irm_cfg.allocator.algorithm,
+        runs=runs,
+        makespans=makespans,
+        summary=summary,
+        expectations=expectations,
+    )

@@ -12,7 +12,7 @@ The hypothesis properties are the system's invariants:
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.binpack import (
     ASYMPTOTIC_RATIO,

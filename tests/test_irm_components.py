@@ -4,7 +4,7 @@ allocator (paper Section V)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.allocator import AllocatorConfig, BinPackingManager, idle_buffer
 from repro.core.load_predictor import LoadPredictor, LoadPredictorConfig

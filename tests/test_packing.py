@@ -3,7 +3,7 @@ pipeline) and the streaming pipeline built on it."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (
     SequencePacker,

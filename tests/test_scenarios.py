@@ -1,0 +1,198 @@
+"""Scenario engine tests: registry round-trip, smoke runs, seed parity.
+
+Three layers:
+  - the registry behaves like a registry (register/get/list/unregister,
+    duplicate rejection, unknown-name errors),
+  - every built-in scenario runs a short deterministic sim without error
+    (via its ``smoke_overrides``) and satisfies the universal expectations,
+  - the paper's two scenarios produce *bit-identical* time series to the
+    legacy ``repro.core.workloads`` + ``simulate`` path, so moving the
+    generators behind the registry changed nothing the benchmarks measure.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import IRM, IRMConfig, SimConfig, simulate
+from repro.core.workloads import synthetic_workload, usecase_workload
+from repro.scenarios import (
+    Stream,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    run_scenario,
+    scenario_names,
+    stream_to_requests,
+    unregister_scenario,
+)
+
+SMALL_SIM = SimConfig(
+    dt=0.5, cores_per_worker=4, max_workers=5,
+    worker_boot_delay=5.0, pe_start_delay=1.0,
+    container_idle_timeout=1.0, t_max=900.0, seed=0,
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip():
+    @register_scenario(
+        "_test-dummy", "throwaway", sim_config=lambda: SMALL_SIM,
+        tags=("test",),
+    )
+    def dummy_stream(seed=0, n=5):
+        return usecase_workload(seed=seed, n_images=n,
+                                duration_range=(2.0, 4.0))
+
+    try:
+        scn = get_scenario("_test-dummy")
+        assert scn.make_stream is dummy_stream
+        assert scn.tags == ("test",)
+        assert "_test-dummy" in scenario_names()
+        # the decorated function stays a plain generator
+        assert isinstance(dummy_stream(0, n=3), Stream)
+        # duplicate registration is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            register_scenario("_test-dummy", "again")(dummy_stream)
+    finally:
+        unregister_scenario("_test-dummy")
+    assert "_test-dummy" not in scenario_names()
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+def test_catalogue_has_at_least_six_scenarios():
+    names = scenario_names()
+    assert len(names) >= 6
+    for required in ("synthetic", "microscopy", "bursty", "diurnal",
+                     "heavy-tailed", "multi-tenant"):
+        assert required in names
+
+
+def test_unknown_policy_rejected_before_running():
+    with pytest.raises(ValueError, match="unknown packing algorithm"):
+        run_scenario("synthetic", policy="no-such-fit", n_runs=1,
+                     t_max=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Every scenario smoke-runs deterministically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", [s.name for s in list_scenarios()])
+def test_scenario_smoke_runs(name):
+    scn = get_scenario(name)
+    assert scn.smoke_overrides is not None, "built-ins must define smoke runs"
+    result = run_scenario(
+        scn, n_runs=1, stream_overrides=scn.smoke_overrides,
+        t_max=scn.smoke_t_max,
+    )
+    res = result.final
+    assert res.total > 0
+    assert res.completed == res.total
+    assert (res.scheduled_cpu <= 1.0 + 1e-9).all()
+    assert len(res.times) == res.measured_cpu.shape[0]
+
+
+@pytest.mark.parametrize("name", [s.name for s in list_scenarios()])
+def test_scenario_smoke_is_deterministic(name):
+    scn = get_scenario(name)
+    kwargs = dict(n_runs=1, stream_overrides=scn.smoke_overrides,
+                  t_max=scn.smoke_t_max)
+    a = run_scenario(scn, **kwargs).final
+    b = run_scenario(scn, **kwargs).final
+    np.testing.assert_array_equal(a.measured_cpu, b.measured_cpu)
+    np.testing.assert_array_equal(a.scheduled_cpu, b.scheduled_cpu)
+    assert a.makespan == b.makespan
+
+
+def test_policy_sweep_changes_nothing_for_equivalent_firstfits():
+    """first-fit and first-fit-tree are the same algorithm (property-tested
+    in test_binpack); the scenario runner must preserve that equivalence."""
+    scn = get_scenario("multi-tenant")
+    kwargs = dict(n_runs=1, stream_overrides=scn.smoke_overrides,
+                  t_max=scn.smoke_t_max)
+    a = run_scenario(scn, policy="first-fit", **kwargs).final
+    b = run_scenario(scn, policy="first-fit-tree", **kwargs).final
+    np.testing.assert_array_equal(a.scheduled_cpu, b.scheduled_cpu)
+
+
+# ---------------------------------------------------------------------------
+# Seed parity: the registry path reproduces the legacy path bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_scenario_matches_legacy_path():
+    stream_kwargs = dict(t_end=60.0, peak_times=(30.0,), peak_size=8,
+                         batch_size=(2, 4))
+    legacy = simulate(synthetic_workload(seed=0, **stream_kwargs), SMALL_SIM)
+
+    scn = get_scenario("synthetic")
+    engine = simulate(scn.make_stream(0, **stream_kwargs), SMALL_SIM)
+
+    np.testing.assert_array_equal(legacy.measured_cpu, engine.measured_cpu)
+    np.testing.assert_array_equal(legacy.scheduled_cpu, engine.scheduled_cpu)
+    np.testing.assert_array_equal(legacy.queue_len, engine.queue_len)
+    assert legacy.makespan == engine.makespan
+
+
+def test_microscopy_scenario_matches_legacy_path():
+    import dataclasses
+
+    stream_kwargs = dict(n_images=40, duration_range=(4.0, 8.0))
+    scn = get_scenario("microscopy")
+
+    # the registered generator IS the seed generator
+    a = usecase_workload(seed=3, **stream_kwargs)
+    b = scn.make_stream(3, **stream_kwargs)
+    assert [m.duration for _, ms in a.batches for m in ms] == [
+        m.duration for _, ms in b.batches for m in ms
+    ]
+
+    # and the runner adds nothing on top of a direct simulate() call
+    result = run_scenario(
+        "microscopy", n_runs=1, stream_overrides=stream_kwargs, t_max=900.0,
+    )
+    cfg = dataclasses.replace(scn.sim_config(), t_max=900.0)
+    direct = simulate(usecase_workload(seed=0, **stream_kwargs), cfg,
+                      irm=IRM(IRMConfig()))
+    np.testing.assert_array_equal(result.final.measured_cpu,
+                                  direct.measured_cpu)
+    np.testing.assert_array_equal(result.final.scheduled_cpu,
+                                  direct.scheduled_cpu)
+    assert result.final.makespan == direct.makespan
+
+
+# ---------------------------------------------------------------------------
+# Serving adapter
+# ---------------------------------------------------------------------------
+
+
+def test_stream_to_requests_is_monotone_in_duration():
+    stream = usecase_workload(seed=0, n_images=10,
+                              duration_range=(5.0, 20.0))
+    schedule = stream_to_requests(stream)
+    assert len(schedule) == 10
+    msgs = [m for _, ms in stream.batches for m in ms]
+    by_id = sorted(range(10), key=lambda i: msgs[i].duration)
+    toks = [schedule[i][1].max_new_tokens for i in by_id]
+    assert toks == sorted(toks)
+    assert all(req.req_class == msgs[0].image for _, req in schedule)
+
+
+def test_serving_backend_drains_scenario_stream():
+    from repro.scenarios import run_serving_scenario
+
+    scn = get_scenario("bursty")
+    summary = run_serving_scenario(
+        scn, stream_overrides=scn.smoke_overrides, t_max=600.0,
+    )
+    assert summary["completed"] == summary["submitted"] > 0
+    assert summary["peak_replicas"] >= 1
