@@ -1,0 +1,166 @@
+"""Simulation-core throughput: indexed hot path vs the pre-refactor sim.
+
+Times ``repro.core.sim.simulate`` (per-image FIFO deques + PE event indices
++ preallocated recording buffers) against the frozen baseline
+``repro.core.sim_reference.simulate_reference`` on the paper's two
+experiment scenarios, checks the outputs are bit-for-bit identical, and
+writes ``BENCH_sim.json``:
+
+    {
+      "schema": "BENCH_sim/v1",
+      "smoke": false,
+      "scenarios": {
+        "microscopy": {
+          "ticks": 568, "messages": 767, "sim_seconds": 284.0,
+          "indexed":   {"wall_s": ..., "ticks_per_s": ..., "messages_per_s": ...},
+          "reference": {"wall_s": ..., "ticks_per_s": ..., "messages_per_s": ...},
+          "speedup": 4.2, "identical": true
+        }, ...
+      },
+      "meta": {"python": ..., "numpy": ..., "platform": ..., "reps": ...}
+    }
+
+Wall times are best-of-``--reps`` (default 3); ``speedup`` is
+``reference.wall_s / indexed.wall_s``.  ``--smoke`` shrinks every scenario
+to its registered smoke overrides for a seconds-long CI run; CI uploads
+the resulting JSON as an artifact so the perf trajectory is tracked per
+commit (see ``.github/workflows/ci.yml``).
+
+Usage:
+    PYTHONPATH=src python benchmarks/sim_throughput.py [--smoke] \
+        [--scenarios microscopy,synthetic] [--reps 3] [--out BENCH_sim.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import simulate, simulate_reference
+from repro.scenarios import get_scenario
+
+DEFAULT_SCENARIOS = ("synthetic", "microscopy")
+
+_RESULT_FIELDS = ("times", "measured_cpu", "scheduled_cpu", "queue_len",
+                  "active_workers", "target_workers", "ideal_bins", "pe_count")
+
+
+def _identical(a, b) -> bool:
+    return (
+        all(np.array_equal(getattr(a, f), getattr(b, f))
+            for f in _RESULT_FIELDS)
+        and a.completed == b.completed
+        and a.makespan == b.makespan
+    )
+
+
+def _bench_one(sim_fn, scn, cfg, overrides: Dict, reps: int):
+    """Best-of-``reps`` wall time; a fresh stream + IRM per repetition."""
+    best = float("inf")
+    result = None
+    for _ in range(reps):
+        stream = scn.make_stream(0, **overrides)
+        t0 = time.perf_counter()
+        result = sim_fn(stream, cfg)
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def bench_scenario(name: str, *, smoke: bool, reps: int) -> Dict:
+    scn = get_scenario(name)
+    cfg = scn.sim_config()
+    overrides: Dict = {}
+    if smoke:
+        overrides = dict(scn.smoke_overrides or {})
+        if scn.smoke_t_max is not None:
+            cfg = dataclasses.replace(cfg, t_max=scn.smoke_t_max)
+
+    new_wall, new_res = _bench_one(simulate, scn, cfg, overrides, reps)
+    ref_wall, ref_res = _bench_one(simulate_reference, scn, cfg, overrides,
+                                   reps)
+
+    ticks = int(len(new_res.times))
+    messages = int(new_res.completed)
+    row = {
+        "ticks": ticks,
+        "messages": messages,
+        "sim_seconds": float(new_res.times[-1]) if ticks else 0.0,
+        "indexed": {
+            "wall_s": new_wall,
+            "ticks_per_s": ticks / new_wall,
+            "messages_per_s": messages / new_wall,
+        },
+        "reference": {
+            "wall_s": ref_wall,
+            "ticks_per_s": ticks / ref_wall,
+            "messages_per_s": messages / ref_wall,
+        },
+        "speedup": ref_wall / new_wall,
+        "identical": _identical(new_res, ref_res),
+    }
+    return row
+
+
+def run(out: str = "BENCH_sim.json", *, smoke: bool = False,
+        scenarios: Optional[List[str]] = None, reps: int = 3) -> Dict:
+    names = list(scenarios or DEFAULT_SCENARIOS)
+    payload = {
+        "schema": "BENCH_sim/v1",
+        "smoke": bool(smoke),
+        "scenarios": {},
+        "meta": {
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "platform": platform.platform(),
+            "reps": reps,
+        },
+    }
+    ok = True
+    for name in names:
+        row = bench_scenario(name, smoke=smoke, reps=reps)
+        payload["scenarios"][name] = row
+        ok &= row["identical"]
+        print(
+            f"{name:<12} ticks={row['ticks']:>6} "
+            f"indexed={row['indexed']['wall_s']*1e3:8.1f}ms "
+            f"({row['indexed']['ticks_per_s']:>9,.0f} ticks/s) "
+            f"reference={row['reference']['wall_s']*1e3:8.1f}ms "
+            f"speedup={row['speedup']:.2f}x "
+            f"identical={row['identical']}"
+        )
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {out}")
+    if not ok:
+        print("ERROR: indexed and reference sims disagree", file=sys.stderr)
+    return payload
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/sim_throughput.py",
+        description="Time the indexed sim core against the pre-refactor sim.",
+    )
+    ap.add_argument("--out", default="BENCH_sim.json",
+                    help="output JSON path (default: ./BENCH_sim.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long run on each scenario's smoke overrides")
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS),
+                    help="comma-separated registered scenario names")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="repetitions per cell; best wall time is reported")
+    args = ap.parse_args(argv)
+    names = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    payload = run(args.out, smoke=args.smoke, scenarios=names, reps=args.reps)
+    return 0 if all(r["identical"] for r in payload["scenarios"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

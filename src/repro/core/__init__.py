@@ -30,6 +30,7 @@ from .load_predictor import LoadPredictor, LoadPredictorConfig, ScaleDecision
 from .profiler import MasterProfiler, ProfilerConfig, WorkerProbe
 from .queues import AllocationQueue, ContainerQueue, HostRequest
 from .sim import SimCluster, SimConfig, SimResult, simulate
+from .sim_reference import ReferenceSimCluster, simulate_reference
 from .spark_baseline import SparkConfig, SparkResult, simulate_spark
 from .workloads import Message, Stream, synthetic_workload, usecase_workload
 
@@ -72,6 +73,8 @@ __all__ = [
     "SimConfig",
     "SimResult",
     "simulate",
+    "ReferenceSimCluster",
+    "simulate_reference",
     "SparkConfig",
     "SparkResult",
     "simulate_spark",

@@ -362,6 +362,13 @@ class Harmonic(AnyFit):
         self.bins[idx].add(item)
         return idx
 
+    def reset(self) -> None:
+        # the class->open-bin map indexes into self.bins; dropping the bins
+        # without clearing it leaves stale indices that the next pack()
+        # dereferences (IndexError)
+        super().reset()
+        self._open = {}
+
 
 # ---------------------------------------------------------------------------
 # Multi-dimensional (vector) bin-packing — the paper's future-work Sec. VII.

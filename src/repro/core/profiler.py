@@ -46,6 +46,11 @@ class MasterProfiler:
         self.config = config or ProfilerConfig()
         self._samples: Dict[str, deque] = {}
         self._count: Dict[str, int] = {}
+        # Memoized estimates: the moving average only changes when a new
+        # measurement arrives (every report_interval), but the simulation
+        # hot path queries it for every PE and backlog message every tick —
+        # cache per image, invalidate on observe().
+        self._est_cache: Dict[str, float] = {}
 
     # -- ingest --------------------------------------------------------------
     def observe(self, image: str, value: float) -> None:
@@ -57,6 +62,7 @@ class MasterProfiler:
             self._count[image] = 0
         dq.append(float(value))
         self._count[image] += 1
+        self._est_cache.pop(image, None)
 
     def observe_report(self, report: Mapping[str, float]) -> None:
         """Ingest a worker probe report: {image: mean usage on that worker}."""
@@ -66,12 +72,17 @@ class MasterProfiler:
     # -- query ---------------------------------------------------------------
     def estimate(self, image: str) -> float:
         """Moving-average item size for ``image`` (default guess if unseen)."""
+        cached = self._est_cache.get(image)
+        if cached is not None:
+            return cached
         dq = self._samples.get(image)
         if not dq:
             est = self.config.default_size
         else:
             est = sum(dq) / len(dq)
-        return min(self.config.max_size, max(self.config.min_size, est))
+        est = min(self.config.max_size, max(self.config.min_size, est))
+        self._est_cache[image] = est
+        return est
 
     def num_observations(self, image: str) -> int:
         return self._count.get(image, 0)
@@ -91,19 +102,37 @@ class WorkerProbe:
     """
 
     def __init__(self) -> None:
-        self._acc: Dict[str, list] = {}
+        # Running (sum, count) per image — bit-identical to accumulating a
+        # list and taking sum()/len() at report time (same left-to-right
+        # float addition order), without growing per-tick Python lists.
+        self._sum: Dict[str, float] = {}
+        self._n: Dict[str, int] = {}
 
     def sample(self, pe_usages: Iterable[Tuple[str, float]]) -> None:
         """Accumulate one round of (image, usage) samples."""
+        acc, counts = self._sum, self._n
         for image, usage in pe_usages:
-            self._acc.setdefault(image, []).append(float(usage))
+            if image in acc:
+                acc[image] += float(usage)
+                counts[image] += 1
+            else:
+                acc[image] = float(usage)
+                counts[image] = 1
+
+    def accumulators(self) -> Tuple[Dict[str, float], Dict[str, int]]:
+        """The live (sum, count) dicts — the simulation's per-PE fast path.
+
+        Callers may accumulate into these directly (same semantics as one
+        ``sample()`` call per entry: add to the sum, bump the count); the
+        representation is owned here so ``report()`` and the hot loop can
+        never drift apart.
+        """
+        return self._sum, self._n
 
     def report(self) -> Dict[str, float]:
         """Flush: per-image mean since the last report (sent to the master)."""
-        out = {
-            image: sum(vals) / len(vals)
-            for image, vals in self._acc.items()
-            if vals
-        }
-        self._acc = {}
+        counts = self._n
+        out = {image: s / counts[image] for image, s in self._sum.items()}
+        self._sum = {}
+        self._n = {}
         return out

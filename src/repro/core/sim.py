@@ -19,13 +19,39 @@ active/target/ideal worker counts (Fig. 10).
 The simulation deliberately reproduces the paper's noise sources: the delay
 between scheduling a PE and it actually drawing CPU (start transient), rapid
 start/stop churn, and measurement noise.
+
+Implementation note — the indexed hot path.  This is the throughput-tuned
+rewrite of the original per-tick full-scan simulation (kept verbatim in
+``sim_reference.py`` and equivalence-tested in
+``tests/test_sim_equivalence.py``).  Results are tick-for-tick, bit-for-bit
+identical; only the data structures changed:
+
+  - the master queue is a set of **per-image FIFO deques** keyed by a global
+    arrival sequence number, so a P2P pull is ``deque.popleft()`` instead of
+    an O(queue) scan + ``list.pop(i)`` — the global-FIFO match order is
+    preserved exactly because each deque stays sorted by sequence number
+    (front re-inserts use decreasing negative sequence numbers);
+  - PE state transitions are driven by **event indices**: a min-heap of
+    STARTING PEs keyed by ready time, a min-heap of BUSY PEs keyed by
+    message completion time, and a dict of IDLE PEs keyed by
+    ``(worker idx, PE creation id)`` — so a tick touches only the PEs that
+    change state plus the currently-idle set, not every PE on every worker;
+  - ``simulate`` records into **preallocated numpy buffers** sliced once at
+    the end instead of growing Python lists and stacking;
+  - per-tick allocations (including a per-tick ``import math``) are hoisted
+    out of the loop, and the master profiler memoizes its moving-average
+    estimates between probe reports (``MasterProfiler.estimate``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Tuple
+import heapq
+import math
+from collections import deque
+from itertools import islice
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -68,15 +94,18 @@ class SimConfig:
 
 
 class SimPE:
-    __slots__ = ("image", "state", "ready_t", "msg", "idle_since", "estimate")
+    __slots__ = ("image", "state", "ready_t", "msg", "idle_since", "estimate",
+                 "uid")
 
-    def __init__(self, image: str, t: float, start_delay: float, estimate: float):
+    def __init__(self, image: str, t: float, start_delay: float,
+                 estimate: float, uid: int = 0):
         self.image = image
         self.state = PEState.STARTING
         self.ready_t = t + start_delay
         self.msg: Optional[Message] = None
         self.idle_since = -1.0
         self.estimate = estimate  # size estimate at placement time (scheduled)
+        self.uid = uid  # creation order; (worker idx, uid) is the pass order
 
 
 class SimWorker:
@@ -119,41 +148,115 @@ class SimResult:
 
 
 class SimCluster:
-    """ClusterView implementation backed by the simulation state."""
+    """ClusterView implementation backed by the simulation state.
+
+    The master queue and the PE population are indexed (see the module
+    docstring) so a tick costs O(changed PEs + idle PEs), not
+    O(workers x PEs x queue).
+    """
 
     def __init__(self, config: SimConfig, irm: IRM):
         self.cfg = config
         self.irm = irm
         self.t = 0.0
         self.rng = np.random.default_rng(config.seed)
-        self.queue: List[Message] = []
         self.workers: List[SimWorker] = []
         self.completed: List[Message] = []
         self.requested_target = 0
+        self.max_done_t = 0.0  # running max over completed messages
         self._failed: set = set()
+        # ---- master queue: per-image FIFO deques of (seq, message) --------
+        # Each deque is sorted ascending by the global arrival sequence
+        # number, so its head is the first message of that image in global
+        # FIFO order.  Normal arrivals take increasing positive sequence
+        # numbers; front re-inserts (failure requeues) take decreasing
+        # negative ones — exactly ``list.insert(0, m)`` semantics.
+        self._img_queues: Dict[str, Deque[Tuple[int, Message]]] = {}
+        self._qlen = 0
+        self._seq_back = 0
+        self._seq_front = 0
+        # ---- PE indices ---------------------------------------------------
+        self._pe_uid = 0
+        self._starting: List[Tuple[float, int, int, SimPE]] = []  # ready_t heap
+        self._busy: List[Tuple[float, int, int, SimPE, Message]] = []  # done_t
+        self._idle: Dict[Tuple[int, int], SimPE] = {}
+        self._dirty_workers: set = set()  # workers with STOPPED PEs to compact
+
+    # ---- master queue ---------------------------------------------------------
+    def _push_back(self, m: Message) -> None:
+        self._seq_back += 1
+        dq = self._img_queues.get(m.image)
+        if dq is None:
+            dq = self._img_queues[m.image] = deque()
+        dq.append((self._seq_back, m))
+        self._qlen += 1
+
+    def _push_front(self, m: Message) -> None:
+        self._seq_front -= 1
+        dq = self._img_queues.get(m.image)
+        if dq is None:
+            dq = self._img_queues[m.image] = deque()
+        dq.appendleft((self._seq_front, m))
+        self._qlen += 1
+
+    def backlog_head(self, k: int) -> List[Message]:
+        """The first ``k`` queued messages in global FIFO order."""
+        if self._qlen == 0 or k <= 0:
+            return []
+        live = [iter(dq) for dq in self._img_queues.values() if dq]
+        if len(live) == 1:
+            return [m for _, m in islice(live[0], k)]
+        return [m for _, m in islice(heapq.merge(*live), k)]
+
+    @property
+    def queue(self) -> List[Message]:
+        """The backlog in global FIFO order (debugging / inspection only)."""
+        return self.backlog_head(self._qlen)
 
     # ---- ClusterView protocol -------------------------------------------------
     def queue_length(self) -> float:
-        return float(len(self.queue))
+        return float(self._qlen)
 
     def queue_image_mix(self) -> Dict[str, float]:
-        mix: Dict[str, float] = {}
-        for m in self.queue:
-            mix[m.image] = mix.get(m.image, 0.0) + 1.0
-        n = max(1.0, float(len(self.queue)))
-        return {k: v / n for k, v in mix.items()}
+        # Insertion order of the result must follow each image's first
+        # occurrence in global FIFO order (= its deque head's sequence
+        # number): the IRM's largest-remainder apportionment breaks ties by
+        # this order.
+        if self._qlen == 0:
+            return {}
+        heads = sorted(
+            (dq[0][0], img, len(dq))
+            for img, dq in self._img_queues.items()
+            if dq
+        )
+        n = float(self._qlen)
+        return {img: cnt / n for _, img, cnt in heads}
 
     def worker_scheduled_loads(self) -> List[float]:
         # Bins are pre-filled with the *current* profiled usage of the PEs
         # they host — the paper propagates updated moving averages to all
         # scheduling state, not placement-time snapshots (Section V-B.3).
+        # Estimates are looked up once per image per call; the accumulation
+        # stays in PE-list order so the float sum matches the reference.
         est = self.irm.profiler.estimate
-        return [
-            sum(est(pe.image) for pe in w.pes if pe.state != PEState.STOPPED)
-            if w.state != WorkerState.OFF
-            else 0.0
-            for w in self.workers
-        ]
+        cache: Dict[str, float] = {}
+        out = []
+        stopped = PEState.STOPPED
+        for w in self.workers:
+            if w.state is WorkerState.OFF:
+                out.append(0.0)
+                continue
+            load = 0.0
+            for pe in w.pes:
+                if pe.state is stopped:
+                    continue
+                img = pe.image
+                v = cache.get(img)
+                if v is None:
+                    v = cache[img] = est(img)
+                load += v
+            out.append(load)
+        return out
 
     def try_start_pe(self, req: HostRequest) -> bool:
         idx = req.target_worker
@@ -162,9 +265,11 @@ class SimCluster:
         w = self.workers[idx]
         if w.state != WorkerState.ACTIVE:
             return False  # e.g. "a new VM still initializing" (paper V-B.2)
-        w.pes.append(
-            SimPE(req.image, self.t, self.cfg.pe_start_delay, req.size_estimate)
-        )
+        self._pe_uid += 1
+        pe = SimPE(req.image, self.t, self.cfg.pe_start_delay,
+                   req.size_estimate, uid=self._pe_uid)
+        w.pes.append(pe)
+        heapq.heappush(self._starting, (pe.ready_t, idx, pe.uid, pe))
         return True
 
     def scale_workers(self, target: int) -> None:
@@ -201,75 +306,132 @@ class SimCluster:
         idx, when = self.cfg.fail_worker_at
         if self.t >= when and idx < len(self.workers) and idx not in self._failed:
             w = self.workers[idx]
-            # in-flight messages are lost back to the master queue (at-least-once)
+            # in-flight messages are lost back to the master queue
+            # (at-least-once); front-inserted one by one, so the last PE's
+            # message ends up globally first — list.insert(0, m) semantics.
             for pe in w.pes:
                 if pe.msg is not None:
                     pe.msg.start_t = -1.0
-                    self.queue.insert(0, pe.msg)
+                    self._push_front(pe.msg)
+                # purge from the indices: heap entries are skipped lazily
+                # once the state no longer matches.
+                self._idle.pop((w.idx, pe.uid), None)
+                pe.state = PEState.STOPPED
+                pe.msg = None
             w.pes = []
             w.state = WorkerState.OFF
             self._failed.add(idx)
 
     def tick(self, arrivals: List[Message]) -> None:
         cfg = self.cfg
-        self.queue.extend(arrivals)
+        for m in arrivals:
+            self._push_back(m)
         self._inject_failure()
+        t = self.t
 
-        # worker/PE lifecycle
+        # worker lifecycle (the pool is tiny — max_workers caps it)
         for w in self.workers:
-            if w.state == WorkerState.BOOTING and self.t >= w.ready_t:
+            if w.state == WorkerState.BOOTING and t >= w.ready_t:
                 w.state = WorkerState.ACTIVE
-            if w.state != WorkerState.ACTIVE:
-                continue
-            for pe in w.pes:
-                if pe.state == PEState.STARTING and self.t >= pe.ready_t:
-                    pe.state = PEState.IDLE
-                    pe.idle_since = self.t
-                if pe.state == PEState.BUSY and pe.msg is not None:
-                    if self.t >= pe.msg.done_t:
-                        self.completed.append(pe.msg)
-                        pe.msg = None
-                        pe.state = PEState.IDLE
-                        pe.idle_since = self.t
-                if pe.state == PEState.IDLE:
-                    # P2P pull: match backlog messages of this image (FIFO)
-                    for i, m in enumerate(self.queue):
-                        if m.image == pe.image:
-                            m.start_t = self.t
-                            m.done_t = self.t + m.duration
-                            pe.msg = self.queue.pop(i)
-                            pe.state = PEState.BUSY
-                            break
-                if (
-                    pe.state == PEState.IDLE
-                    and self.t - pe.idle_since >= cfg.container_idle_timeout
-                ):
+
+        # STARTING -> IDLE.  Transition conditions depend only on t, so
+        # draining the ready heap is order-equivalent to the reference
+        # simulation's in-pass checks.
+        sh = self._starting
+        while sh and sh[0][0] <= t:
+            _, widx, uid, pe = heapq.heappop(sh)
+            if pe.state is PEState.STARTING:
+                pe.state = PEState.IDLE
+                pe.idle_since = t
+                self._idle[(widx, uid)] = pe
+
+        # BUSY -> IDLE (message completions)
+        bh = self._busy
+        done_now: List[Tuple[int, int, SimPE]] = []
+        while bh and bh[0][0] <= t:
+            _, widx, uid, pe, msg = heapq.heappop(bh)
+            if pe.state is PEState.BUSY and pe.msg is msg:
+                done_now.append((widx, uid, pe))
+        # completed in the reference pass order: (worker idx, PE order)
+        done_now.sort()
+        for widx, uid, pe in done_now:
+            self.completed.append(pe.msg)
+            if pe.msg.done_t > self.max_done_t:
+                self.max_done_t = pe.msg.done_t
+            pe.msg = None
+            pe.state = PEState.IDLE
+            pe.idle_since = t
+            self._idle[(widx, uid)] = pe
+
+        # IDLE: P2P pulls then the idle timeout, in the reference pass order.
+        # A pull is deque.popleft() on this image's FIFO — the head is the
+        # first matching message in *global* FIFO order by construction.
+        if self._idle:
+            timeout = cfg.container_idle_timeout
+            img_queues = self._img_queues
+            for key in sorted(self._idle):
+                pe = self._idle[key]
+                dq = img_queues.get(pe.image)
+                if dq:
+                    _, m = dq.popleft()
+                    self._qlen -= 1
+                    m.start_t = t
+                    m.done_t = t + m.duration
+                    pe.msg = m
+                    pe.state = PEState.BUSY
+                    del self._idle[key]
+                    heapq.heappush(bh, (m.done_t, key[0], key[1], pe, m))
+                elif t - pe.idle_since >= timeout:
                     pe.state = PEState.STOPPED  # graceful self-termination
-            w.pes = [pe for pe in w.pes if pe.state != PEState.STOPPED]
+                    del self._idle[key]
+                    self._dirty_workers.add(key[0])
+
+        # compact only the workers that lost a PE this tick
+        if self._dirty_workers:
+            for widx in self._dirty_workers:
+                w = self.workers[widx]
+                w.pes = [pe for pe in w.pes if pe.state is not PEState.STOPPED]
+            self._dirty_workers.clear()
 
     def measure(self) -> np.ndarray:
         """Instantaneous measured CPU per worker (fraction of the worker)."""
         cfg = self.cfg
+        cores_per_worker = float(cfg.cores_per_worker)
+        noise_std = cfg.cpu_noise_std * cfg.cores_per_worker
+        # idle draw pre-clipped to [0, cores_per_worker] once per call
+        idle_draw = min(max(cfg.idle_pe_cpu_cores, 0.0), cores_per_worker)
+        rng_normal = self.rng.normal
+        busy, idle = PEState.BUSY, PEState.IDLE
         out = np.zeros(max(len(self.workers), 1))
         for w in self.workers:
             if w.state != WorkerState.ACTIVE:
                 continue
             cores = 0.0
-            samples = []
+            # accumulate straight into the probe's per-image running means
+            # (same order and float addition as WorkerProbe.sample)
+            acc, counts = w.probe.accumulators()
             for pe in w.pes:
-                if pe.state == PEState.BUSY and pe.msg is not None:
-                    draw = pe.msg.cpu_cores * float(
-                        self.rng.normal(1.0, cfg.cpu_noise_std * cfg.cores_per_worker)
-                    )
-                elif pe.state == PEState.IDLE:
-                    draw = cfg.idle_pe_cpu_cores
+                if pe.state is busy and pe.msg is not None:
+                    draw = pe.msg.cpu_cores * float(rng_normal(1.0, noise_std))
+                    # clip to [0, cores_per_worker] (bit-equal to np.clip)
+                    if draw < 0.0:
+                        draw = 0.0
+                    elif draw > cores_per_worker:
+                        draw = cores_per_worker
+                elif pe.state is idle:
+                    draw = idle_draw
                 else:  # STARTING draws ~nothing: the paper's transient error
                     draw = 0.0
-                draw = float(np.clip(draw, 0.0, cfg.cores_per_worker))
                 cores += draw
-                samples.append((pe.image, draw / cfg.cores_per_worker))
-            out[w.idx] = min(1.0, cores / cfg.cores_per_worker)
-            w.probe.sample(samples)
+                img = pe.image
+                if img in acc:
+                    acc[img] += draw / cores_per_worker
+                    counts[img] += 1
+                else:
+                    acc[img] = draw / cores_per_worker
+                    counts[img] = 1
+            u = cores / cores_per_worker
+            out[w.idx] = u if u < 1.0 else 1.0
         return out
 
     def flush_probes(self) -> None:
@@ -300,25 +462,33 @@ def simulate(
     cluster = SimCluster(cfg, irm)
 
     batches = sorted(stream.batches, key=lambda b: b[0])
+    n_batches = len(batches)
     next_batch = 0
     total = stream.num_messages
 
-    times: List[float] = []
-    measured: List[np.ndarray] = []
-    scheduled: List[np.ndarray] = []
-    qlen: List[float] = []
-    active: List[int] = []
-    target: List[int] = []
-    ideal: List[int] = []
-    pe_count: List[int] = []
+    # preallocated recording buffers, sliced to the tick count at the end
+    cap = int(cfg.t_max / cfg.dt) + 2
+    times = np.empty(cap, np.float64)
+    measured = np.zeros((cap, cfg.max_workers), np.float64)
+    scheduled = np.zeros((cap, cfg.max_workers), np.float64)
+    qlen = np.empty(cap, np.int64)
+    active = np.empty(cap, np.int64)
+    target = np.empty(cap, np.int64)
+    ideal = np.empty(cap, np.int64)
+    pe_count = np.empty(cap, np.int64)
+
+    W = cfg.max_workers
+    workers = cluster.workers
+    estimate = irm.profiler.estimate
+    ACTIVE_STATE = WorkerState.ACTIVE
     last_report_t = -1e9
-    makespan = 0.0
+    n = 0
 
     t = 0.0
     while t <= cfg.t_max:
         cluster.t = t
         arrivals: List[Message] = []
-        while next_batch < len(batches) and batches[next_batch][0] <= t:
+        while next_batch < n_batches and batches[next_batch][0] <= t:
             arrivals.extend(batches[next_batch][1])
             next_batch += 1
 
@@ -329,53 +499,64 @@ def simulate(
             last_report_t = t
         irm.step(t, cluster)
 
-        W = cfg.max_workers
-        mw = np.zeros(W)
-        mw[: min(len(m), W)] = m[:W]
-        sw = np.zeros(W)
+        if n >= cap:  # t_max/dt bounds the tick count; guard regardless
+            times = np.concatenate([times, np.empty(cap, np.float64)])
+            measured = np.vstack([measured, np.zeros((cap, W), np.float64)])
+            scheduled = np.vstack([scheduled, np.zeros((cap, W), np.float64)])
+            qlen = np.concatenate([qlen, np.empty(cap, np.int64)])
+            active = np.concatenate([active, np.empty(cap, np.int64)])
+            target = np.concatenate([target, np.empty(cap, np.int64)])
+            ideal = np.concatenate([ideal, np.empty(cap, np.int64)])
+            pe_count = np.concatenate([pe_count, np.empty(cap, np.int64)])
+            cap *= 2
+
+        times[n] = t
+        k = min(len(m), W)
+        measured[n, :k] = m[:k]
         sl = cluster.worker_scheduled_loads()
-        sw[: min(len(sl), W)] = np.minimum(np.array(sl[:W]), 1.0)
+        srow = scheduled[n]
+        for j in range(min(len(sl), W)):
+            v = sl[j]
+            srow[j] = v if v < 1.0 else 1.0
 
-        times.append(t)
-        measured.append(mw)
-        scheduled.append(sw)
-        qlen.append(len(cluster.queue))
-        active.append(
-            sum(1 for w in cluster.workers if w.state == WorkerState.ACTIVE)
-        )
-        target.append(cluster.requested_target)
+        qlen[n] = cluster._qlen
+        n_active = 0
+        n_pes = 0
+        busy_load = 0.0
+        for w in workers:
+            n_pes += len(w.pes)
+            if w.state is ACTIVE_STATE:
+                n_active += 1
+                for pe in w.pes:
+                    busy_load += pe.estimate
+        active[n] = n_active
+        target[n] = cluster.requested_target
+        pe_count[n] = n_pes
         # ideal bins for the *current* in-system load (backlog + busy PEs)
-        busy_load = sum(
-            pe.estimate
-            for w in cluster.workers
-            for pe in w.pes
-            if w.state == WorkerState.ACTIVE
-        )
-        est = irm.profiler
-        backlog_load = sum(est.estimate(msg.image) for msg in cluster.queue[:64])
-        import math as _math
+        backlog_load = 0.0
+        for msg in cluster.backlog_head(64):
+            backlog_load += estimate(msg.image)
+        ideal[n] = int(math.ceil(
+            busy_load + (backlog_load if backlog_load < 64.0 else 64.0)
+        ))
+        n += 1
 
-        ideal.append(int(_math.ceil(busy_load + min(backlog_load, 64.0))))
-        pe_count.append(sum(len(w.pes) for w in cluster.workers))
-
-        if cluster.completed:
-            makespan = max(makespan, max(mm.done_t for mm in cluster.completed))
         done = len(cluster.completed)
-        if done >= total and next_batch >= len(batches) and not cluster.queue:
+        if done >= total and next_batch >= n_batches and cluster._qlen == 0:
             break
         t = round(t + cfg.dt, 9)
 
     return SimResult(
-        times=np.array(times),
-        measured_cpu=np.stack(measured),
-        scheduled_cpu=np.stack(scheduled),
-        queue_len=np.array(qlen),
-        active_workers=np.array(active),
-        target_workers=np.array(target),
-        ideal_bins=np.array(ideal),
-        pe_count=np.array(pe_count),
+        times=times[:n].copy(),
+        measured_cpu=measured[:n].copy(),
+        scheduled_cpu=scheduled[:n].copy(),
+        queue_len=qlen[:n].copy(),
+        active_workers=active[:n].copy(),
+        target_workers=target[:n].copy(),
+        ideal_bins=ideal[:n].copy(),
+        pe_count=pe_count[:n].copy(),
         completed=len(cluster.completed),
         total=total,
-        makespan=makespan,
+        makespan=cluster.max_done_t,
         messages=[m for _, b in stream.batches for m in b],
     )

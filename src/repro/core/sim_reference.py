@@ -1,0 +1,356 @@
+"""Reference simulation: the original per-tick full-scan implementation.
+
+This module preserves, verbatim, the simulation hot path as it existed
+before the indexed rewrite in ``sim.py``: every tick scans every worker and
+every PE, a P2P pull is an O(queue) linear scan + ``list.pop(i)``, and the
+recorded time series grow as Python lists.  It exists for two reasons:
+
+  1. **Equivalence testing** — ``tests/test_sim_equivalence.py`` asserts the
+     indexed simulation reproduces this implementation's time series
+     bit-for-bit (same seeds, same RNG draw order) on every registered
+     scenario, so the fast path can never silently drift from the paper's
+     semantics.
+  2. **Speedup measurement** — ``benchmarks/sim_throughput.py`` times both
+     implementations on the paper's scenarios and reports the ratio in
+     ``BENCH_sim.json``.
+
+Do not optimize this module; it is the frozen baseline.  The shared
+dataclasses (``SimConfig``, ``SimResult``) and the state enums are imported
+from ``sim.py`` so results from both paths are directly comparable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .irm import IRM, IRMConfig
+from .profiler import MasterProfiler
+from .queues import HostRequest
+from .sim import PEState, SimConfig, SimResult, WorkerState
+from .workloads import Message, Stream
+
+__all__ = ["ReferenceSimCluster", "simulate_reference"]
+
+
+class _RefProbe:
+    """Pre-refactor ``WorkerProbe``: per-tick sample lists, mean at report."""
+
+    def __init__(self) -> None:
+        self._acc: Dict[str, list] = {}
+
+    def sample(self, pe_usages) -> None:
+        for image, usage in pe_usages:
+            self._acc.setdefault(image, []).append(float(usage))
+
+    def report(self) -> Dict[str, float]:
+        out = {
+            image: sum(vals) / len(vals)
+            for image, vals in self._acc.items()
+            if vals
+        }
+        self._acc = {}
+        return out
+
+
+class _RefProfiler(MasterProfiler):
+    """Pre-refactor ``MasterProfiler.estimate``: recompute the moving
+    average on every query (no memoization).  Values are identical; only
+    the per-call cost differs."""
+
+    def estimate(self, image: str) -> float:
+        dq = self._samples.get(image)
+        if not dq:
+            est = self.config.default_size
+        else:
+            est = sum(dq) / len(dq)
+        return min(self.config.max_size, max(self.config.min_size, est))
+
+
+class _RefPE:
+    __slots__ = ("image", "state", "ready_t", "msg", "idle_since", "estimate")
+
+    def __init__(self, image: str, t: float, start_delay: float, estimate: float):
+        self.image = image
+        self.state = PEState.STARTING
+        self.ready_t = t + start_delay
+        self.msg: Optional[Message] = None
+        self.idle_since = -1.0
+        self.estimate = estimate  # size estimate at placement time (scheduled)
+
+
+class _RefWorker:
+    __slots__ = ("idx", "state", "ready_t", "pes", "probe")
+
+    def __init__(self, idx: int, t: float, boot_delay: float):
+        self.idx = idx
+        self.state = WorkerState.BOOTING if boot_delay > 0 else WorkerState.ACTIVE
+        self.ready_t = t + boot_delay
+        self.pes: List[_RefPE] = []
+        self.probe = _RefProbe()
+
+
+class ReferenceSimCluster:
+    """ClusterView implementation backed by the simulation state."""
+
+    def __init__(self, config: SimConfig, irm: IRM):
+        self.cfg = config
+        self.irm = irm
+        self.t = 0.0
+        self.rng = np.random.default_rng(config.seed)
+        self.queue: List[Message] = []
+        self.workers: List[_RefWorker] = []
+        self.completed: List[Message] = []
+        self.requested_target = 0
+        self._failed: set = set()
+
+    # ---- ClusterView protocol -------------------------------------------------
+    def queue_length(self) -> float:
+        return float(len(self.queue))
+
+    def queue_image_mix(self) -> Dict[str, float]:
+        mix: Dict[str, float] = {}
+        for m in self.queue:
+            mix[m.image] = mix.get(m.image, 0.0) + 1.0
+        n = max(1.0, float(len(self.queue)))
+        return {k: v / n for k, v in mix.items()}
+
+    def worker_scheduled_loads(self) -> List[float]:
+        # Bins are pre-filled with the *current* profiled usage of the PEs
+        # they host — the paper propagates updated moving averages to all
+        # scheduling state, not placement-time snapshots (Section V-B.3).
+        est = self.irm.profiler.estimate
+        return [
+            sum(est(pe.image) for pe in w.pes if pe.state != PEState.STOPPED)
+            if w.state != WorkerState.OFF
+            else 0.0
+            for w in self.workers
+        ]
+
+    def try_start_pe(self, req: HostRequest) -> bool:
+        idx = req.target_worker
+        if idx is None or idx >= len(self.workers):
+            return False
+        w = self.workers[idx]
+        if w.state != WorkerState.ACTIVE:
+            return False  # e.g. "a new VM still initializing" (paper V-B.2)
+        w.pes.append(
+            _RefPE(req.image, self.t, self.cfg.pe_start_delay, req.size_estimate)
+        )
+        return True
+
+    def scale_workers(self, target: int) -> None:
+        self.requested_target = target
+        capped = min(target, self.cfg.max_workers)
+        n_alive = sum(1 for w in self.workers if w.state != WorkerState.OFF)
+        # boot additional workers
+        while n_alive < capped:
+            # reuse the lowest OFF slot if any, else append
+            slot = next(
+                (w for w in self.workers if w.state == WorkerState.OFF), None
+            )
+            if slot is not None and slot.idx not in self._failed:
+                slot.state = WorkerState.BOOTING
+                slot.ready_t = self.t + self.cfg.worker_boot_delay
+            else:
+                self.workers.append(
+                    _RefWorker(len(self.workers), self.t, self.cfg.worker_boot_delay)
+                )
+            n_alive += 1
+        # deactivate empty workers above the target (highest index first)
+        if n_alive > capped:
+            for w in reversed(self.workers):
+                if n_alive <= capped:
+                    break
+                if w.state == WorkerState.ACTIVE and not w.pes:
+                    w.state = WorkerState.OFF
+                    n_alive -= 1
+
+    # ---- simulation dynamics ---------------------------------------------------
+    def _inject_failure(self) -> None:
+        if self.cfg.fail_worker_at is None:
+            return
+        idx, when = self.cfg.fail_worker_at
+        if self.t >= when and idx < len(self.workers) and idx not in self._failed:
+            w = self.workers[idx]
+            # in-flight messages are lost back to the master queue (at-least-once)
+            for pe in w.pes:
+                if pe.msg is not None:
+                    pe.msg.start_t = -1.0
+                    self.queue.insert(0, pe.msg)
+            w.pes = []
+            w.state = WorkerState.OFF
+            self._failed.add(idx)
+
+    def tick(self, arrivals: List[Message]) -> None:
+        cfg = self.cfg
+        self.queue.extend(arrivals)
+        self._inject_failure()
+
+        # worker/PE lifecycle
+        for w in self.workers:
+            if w.state == WorkerState.BOOTING and self.t >= w.ready_t:
+                w.state = WorkerState.ACTIVE
+            if w.state != WorkerState.ACTIVE:
+                continue
+            for pe in w.pes:
+                if pe.state == PEState.STARTING and self.t >= pe.ready_t:
+                    pe.state = PEState.IDLE
+                    pe.idle_since = self.t
+                if pe.state == PEState.BUSY and pe.msg is not None:
+                    if self.t >= pe.msg.done_t:
+                        self.completed.append(pe.msg)
+                        pe.msg = None
+                        pe.state = PEState.IDLE
+                        pe.idle_since = self.t
+                if pe.state == PEState.IDLE:
+                    # P2P pull: match backlog messages of this image (FIFO)
+                    for i, m in enumerate(self.queue):
+                        if m.image == pe.image:
+                            m.start_t = self.t
+                            m.done_t = self.t + m.duration
+                            pe.msg = self.queue.pop(i)
+                            pe.state = PEState.BUSY
+                            break
+                if (
+                    pe.state == PEState.IDLE
+                    and self.t - pe.idle_since >= cfg.container_idle_timeout
+                ):
+                    pe.state = PEState.STOPPED  # graceful self-termination
+            w.pes = [pe for pe in w.pes if pe.state != PEState.STOPPED]
+
+    def measure(self) -> np.ndarray:
+        """Instantaneous measured CPU per worker (fraction of the worker)."""
+        cfg = self.cfg
+        out = np.zeros(max(len(self.workers), 1))
+        for w in self.workers:
+            if w.state != WorkerState.ACTIVE:
+                continue
+            cores = 0.0
+            samples = []
+            for pe in w.pes:
+                if pe.state == PEState.BUSY and pe.msg is not None:
+                    draw = pe.msg.cpu_cores * float(
+                        self.rng.normal(1.0, cfg.cpu_noise_std * cfg.cores_per_worker)
+                    )
+                elif pe.state == PEState.IDLE:
+                    draw = cfg.idle_pe_cpu_cores
+                else:  # STARTING draws ~nothing: the paper's transient error
+                    draw = 0.0
+                draw = float(np.clip(draw, 0.0, cfg.cores_per_worker))
+                cores += draw
+                samples.append((pe.image, draw / cfg.cores_per_worker))
+            out[w.idx] = min(1.0, cores / cfg.cores_per_worker)
+            w.probe.sample(samples)
+        return out
+
+    def flush_probes(self) -> None:
+        for w in self.workers:
+            if w.state == WorkerState.ACTIVE and w.pes:
+                report = w.probe.report()
+                if report:
+                    self.irm.ingest_report(report)
+
+
+def simulate_reference(
+    stream: Stream,
+    config: Optional[SimConfig] = None,
+    irm: Optional[IRM] = None,
+    irm_config: Optional[IRMConfig] = None,
+) -> SimResult:
+    """Run the IRM against a workload stream with the pre-refactor sim.
+
+    Same contract as ``sim.simulate`` — see the module docstring for why
+    this frozen copy exists.
+    """
+    cfg = config or SimConfig()
+    if irm is None:
+        irm = IRM(irm_config or IRMConfig())
+        # freeze the pre-refactor profiler cost model with the fresh IRM
+        # (an explicitly passed IRM is left untouched — cross-run state)
+        irm.profiler = _RefProfiler(irm.config.profiler)
+    else:
+        irm.begin_run()
+    cluster = ReferenceSimCluster(cfg, irm)
+
+    batches = sorted(stream.batches, key=lambda b: b[0])
+    next_batch = 0
+    total = stream.num_messages
+
+    times: List[float] = []
+    measured: List[np.ndarray] = []
+    scheduled: List[np.ndarray] = []
+    qlen: List[float] = []
+    active: List[int] = []
+    target: List[int] = []
+    ideal: List[int] = []
+    pe_count: List[int] = []
+    last_report_t = -1e9
+    makespan = 0.0
+
+    t = 0.0
+    while t <= cfg.t_max:
+        cluster.t = t
+        arrivals: List[Message] = []
+        while next_batch < len(batches) and batches[next_batch][0] <= t:
+            arrivals.extend(batches[next_batch][1])
+            next_batch += 1
+
+        cluster.tick(arrivals)
+        m = cluster.measure()
+        if t - last_report_t >= cfg.report_interval:
+            cluster.flush_probes()
+            last_report_t = t
+        irm.step(t, cluster)
+
+        W = cfg.max_workers
+        mw = np.zeros(W)
+        mw[: min(len(m), W)] = m[:W]
+        sw = np.zeros(W)
+        sl = cluster.worker_scheduled_loads()
+        sw[: min(len(sl), W)] = np.minimum(np.array(sl[:W]), 1.0)
+
+        times.append(t)
+        measured.append(mw)
+        scheduled.append(sw)
+        qlen.append(len(cluster.queue))
+        active.append(
+            sum(1 for w in cluster.workers if w.state == WorkerState.ACTIVE)
+        )
+        target.append(cluster.requested_target)
+        # ideal bins for the *current* in-system load (backlog + busy PEs)
+        busy_load = sum(
+            pe.estimate
+            for w in cluster.workers
+            for pe in w.pes
+            if w.state == WorkerState.ACTIVE
+        )
+        est = irm.profiler
+        backlog_load = sum(est.estimate(msg.image) for msg in cluster.queue[:64])
+        import math as _math
+
+        ideal.append(int(_math.ceil(busy_load + min(backlog_load, 64.0))))
+        pe_count.append(sum(len(w.pes) for w in cluster.workers))
+
+        if cluster.completed:
+            makespan = max(makespan, max(mm.done_t for mm in cluster.completed))
+        done = len(cluster.completed)
+        if done >= total and next_batch >= len(batches) and not cluster.queue:
+            break
+        t = round(t + cfg.dt, 9)
+
+    return SimResult(
+        times=np.array(times),
+        measured_cpu=np.stack(measured),
+        scheduled_cpu=np.stack(scheduled),
+        queue_len=np.array(qlen),
+        active_workers=np.array(active),
+        target_workers=np.array(target),
+        ideal_bins=np.array(ideal),
+        pe_count=np.array(pe_count),
+        completed=len(cluster.completed),
+        total=total,
+        makespan=makespan,
+        messages=[m for _, b in stream.batches for m in b],
+    )

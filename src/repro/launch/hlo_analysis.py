@@ -163,11 +163,18 @@ def _parse_computations(text: str) -> Dict[str, List[_Op]]:
                 depth -= 1
             i += 1
         operand_str = rest[start : i - 1]
-        operands = [
-            o.strip().lstrip("%")
-            for o in re.split(r",\s*(?![^{]*})", operand_str)
-            if o.strip().startswith("%")
-        ]
+        # Operand references come in two printer styles: bare (``%p0``) and
+        # typed (``f32[128,256]{1,0} %Arg_0.1`` — jax 0.4.x compiled text).
+        # Either way the %name token ends the operand chunk.
+        operands = []
+        for o in re.split(r",\s*(?![^{]*})", operand_str):
+            o = o.strip()
+            if o.startswith("%"):
+                operands.append(o.lstrip("%"))
+            elif o:
+                mo2 = re.search(r"%([\w\.\-]+)\s*$", o)
+                if mo2:
+                    operands.append(mo2.group(1))
         attrs = rest[i:]
         ops.append(_Op(name, rtype, opcode, operands, attrs, raw=line))
     if entry is not None:

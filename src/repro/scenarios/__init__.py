@@ -10,8 +10,8 @@ Public surface:
   - ``Message``, ``Stream`` and the stream generators (``streams``),
   - ``Scenario``, ``Expectation``, ``register_scenario``, ``get_scenario``,
     ``list_scenarios``, ``scenario_names`` (``registry``),
-  - ``run_scenario``, ``ScenarioResult``, ``summarize_result``, ``POLICIES``
-    (``engine``),
+  - ``run_scenario``, ``sweep_policies``, ``ScenarioResult``,
+    ``summarize_result``, ``POLICIES`` (``engine``),
   - ``run_serving_scenario``, ``stream_to_requests`` (``serving``),
   - the built-in catalogue registers on first registry access (``library``).
 
@@ -39,6 +39,7 @@ _LAZY = {
     "unregister_scenario": "registry",
     "ScenarioResult": "engine",
     "run_scenario": "engine",
+    "sweep_policies": "engine",
     "summarize_result": "engine",
     "POLICIES": "engine",
     "run_serving_scenario": "serving",

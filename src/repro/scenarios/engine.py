@@ -11,7 +11,8 @@ report (utilization, scheduled-vs-measured error, worker targets).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Union
+import os
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -20,11 +21,15 @@ from ..core.irm import IRM
 from ..core.sim import SimResult, simulate
 from .registry import Scenario, get_scenario
 
-__all__ = ["ScenarioResult", "run_scenario", "summarize_result", "POLICIES", "ACTIVE_THRESHOLD"]
+__all__ = ["ScenarioResult", "run_scenario", "sweep_policies",
+           "summarize_result", "POLICIES", "ACTIVE_THRESHOLD"]
 
-# Packing policies the CLI sweeps; every name resolves via make_packer.
-POLICIES = ("first-fit", "first-fit-tree", "best-fit", "worst-fit", "next-fit",
-            "harmonic")
+# Packing policies the CLI sweeps; every name resolves via make_packer and
+# supports the IRM's pre-filled open bins.  ``harmonic`` is deliberately
+# absent: it has no pre-filled-bins mode (the allocator rejects it — see
+# test_packing_rejects_non_anyfit) and exists for the algorithm-comparison
+# microbenchmarks only.
+POLICIES = ("first-fit", "first-fit-tree", "best-fit", "worst-fit", "next-fit")
 
 # Activity threshold shared with the seed benchmarks and the library's
 # expectation checks (a worker counts as scheduled when its packed load
@@ -147,3 +152,73 @@ def run_scenario(
         summary=summary,
         expectations=expectations,
     )
+
+
+# ---------------------------------------------------------------------------
+# Parallel policy sweeps
+# ---------------------------------------------------------------------------
+
+
+def _sweep_one(args: tuple) -> ScenarioResult:
+    """Process-pool entry point: runs exactly one (scenario, policy) cell.
+
+    Must be a module-level function (picklable); the scenario travels by
+    *name* and is re-resolved from the registry in the child process.
+    """
+    name, policy, kwargs = args
+    return run_scenario(name, policy=policy, **kwargs)
+
+
+def sweep_policies(
+    scenario: Union[str, Scenario],
+    policies: Sequence[str] = POLICIES,
+    *,
+    jobs: Optional[int] = None,
+    base_seed: int = 0,
+    n_runs: Optional[int] = None,
+    stream_overrides: Optional[Dict[str, object]] = None,
+    t_max: Optional[float] = None,
+) -> Dict[str, ScenarioResult]:
+    """Run one scenario under every policy, one process per policy.
+
+    IRM state (profiler, queues, predictor) is constructed per policy inside
+    ``run_scenario``, so the sweep cells are fully independent and the
+    parallel results are identical to a serial loop — this is what makes
+    broad policy evaluations (the many-cheap-runs methodology of the
+    autoscaling-evaluation literature) practical on the fast sim core.
+
+    ``jobs`` caps worker processes (default: ``min(len(policies), cpus)``);
+    ``jobs=1`` — or an unregistered ad-hoc ``Scenario`` object, which cannot
+    be re-resolved inside a child process — falls back to the serial loop.
+    Results keep the order of ``policies``.
+    """
+    policies = list(policies)
+    for p in policies:
+        make_packer(p)  # validate every name before spawning workers
+    kwargs = dict(base_seed=base_seed, n_runs=n_runs,
+                  stream_overrides=stream_overrides, t_max=t_max)
+
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    try:
+        registered = get_scenario(scn.name) is scn
+    except KeyError:
+        registered = False
+    if jobs is None:
+        jobs = min(len(policies), os.cpu_count() or 1)
+    if jobs <= 1 or len(policies) <= 1 or not registered:
+        return {p: run_scenario(scn, policy=p, **kwargs) for p in policies}
+
+    import concurrent.futures as cf
+    from concurrent.futures.process import BrokenProcessPool
+
+    work = [(scn.name, p, kwargs) for p in policies]
+    try:
+        with cf.ProcessPoolExecutor(max_workers=jobs) as ex:
+            results = list(ex.map(_sweep_one, work))
+    except (KeyError, BrokenProcessPool):
+        # Under the spawn start method (macOS/Windows) a child only sees
+        # scenarios registered at import time; a dynamically registered one
+        # raises KeyError there even though the parent resolved it.  Fall
+        # back to the serial loop rather than crash.
+        return {p: run_scenario(scn, policy=p, **kwargs) for p in policies}
+    return {p: r for p, r in zip(policies, results)}

@@ -32,7 +32,7 @@ import os
 import sys
 from typing import Dict, List, Optional
 
-from .engine import POLICIES, ScenarioResult, run_scenario
+from .engine import POLICIES, ScenarioResult, run_scenario, sweep_policies
 from .registry import get_scenario, list_scenarios
 
 
@@ -120,6 +120,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="override the scenario's run count")
     ap.add_argument("--t-max", type=float, default=None,
                     help="override the simulated-time cap (seconds)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker processes for multi-policy sweeps (one "
+                    "process per policy; default: min(#policies, CPUs); "
+                    "1 forces the serial path)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-long run via the scenario's smoke overrides")
     ap.add_argument("--out", default=None,
@@ -189,21 +193,24 @@ def main(argv: Optional[List[str]] = None) -> int:
     else:
         policies = [p.strip() for p in args.policy.split(",") if p.strip()]
 
+    run_kwargs = dict(base_seed=args.seed, n_runs=n_runs,
+                      stream_overrides=stream_overrides, t_max=t_max)
+    try:
+        if len(policies) > 1 and None not in policies:
+            # policy sweep: one process per policy (IRM state is per-policy)
+            results = sweep_policies(
+                scn, policies, jobs=args.jobs, **run_kwargs
+            )
+        else:
+            results = {p: run_scenario(scn, policy=p, **run_kwargs)
+                       for p in policies}
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
     failed = False
     all_summaries: Dict[str, Dict] = {}
-    for policy in policies:
-        try:
-            result = run_scenario(
-                scn,
-                policy=policy,
-                base_seed=args.seed,
-                n_runs=n_runs,
-                stream_overrides=stream_overrides,
-                t_max=t_max,
-            )
-        except ValueError as e:
-            print(f"error: {e}", file=sys.stderr)
-            return 2
+    for result in results.values():
         _print_summary(result)
         failed |= not result.ok
         all_summaries[result.policy] = {

@@ -245,3 +245,19 @@ def test_tree_reset_and_regrowth():
     assert len(fft.bins) == 9
     fft.reset()
     assert fft.pack_one(Item(0.5)) == 0
+
+
+def test_harmonic_reset_clears_open_bins():
+    """Regression: reset() used to leave the stale class->bin map behind,
+    so the next pack() dereferenced a bin index past the emptied bin list
+    (IndexError: list index out of range)."""
+    h = Harmonic(m=8)
+    h.pack([Item(0.4), Item(0.3), Item(0.3)])
+    assert h.bins
+    h.reset()
+    assert h.bins == [] and h._open == {}
+    # same class as before the reset -> must open a fresh bin 0, not index
+    # into the dropped bin list
+    assert h.pack_one(Item(0.4)) == 0
+    assert h.pack_one(Item(0.4)) == 0  # class 2: two items share the bin
+    assert h.pack_one(Item(0.4)) == 1  # third opens the next class-2 bin

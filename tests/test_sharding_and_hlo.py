@@ -14,12 +14,21 @@ from repro.launch.hlo_analysis import (
 )
 
 
+def abstract_mesh(shape, names):
+    """AbstractMesh across jax versions: 0.4.x takes (name, size) pairs,
+    newer jax takes positional (shape, names)."""
+    try:
+        return AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return AbstractMesh(shape, names)
+
+
 def mesh_16x16():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_2x16x16():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,193 @@
+"""Equivalence suite for the indexed simulation hot path.
+
+The refactored ``repro.core.sim`` (per-image FIFO deques, PE event indices,
+preallocated recording buffers) must reproduce the frozen pre-refactor
+implementation ``repro.core.sim_reference`` tick-for-tick, bit-for-bit:
+same seeds, same RNG draw order, same float-summation order.  These tests
+pin that contract on every registered scenario, across profiler-persisting
+multi-run experiments, and under fault injection — plus a property test
+that per-image deque pulling matches the old global-FIFO scan order on
+random multi-image queues.
+"""
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import IRM, IRMConfig, SimConfig, simulate, simulate_reference
+from repro.core.workloads import usecase_workload
+from repro.scenarios import get_scenario, scenario_names
+
+ARRAY_FIELDS = ("times", "measured_cpu", "scheduled_cpu", "queue_len",
+                "active_workers", "target_workers", "ideal_bins", "pe_count")
+
+
+def assert_results_identical(a, b, label=""):
+    for f in ARRAY_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype, f"{label}{f}: dtype {x.dtype} != {y.dtype}"
+        np.testing.assert_array_equal(x, y, err_msg=f"{label}{f}")
+    assert a.completed == b.completed
+    assert a.total == b.total
+    assert a.makespan == b.makespan
+
+
+def _smoke_cfg(scn):
+    cfg = scn.sim_config()
+    if scn.smoke_t_max is not None:
+        cfg = dataclasses.replace(cfg, t_max=scn.smoke_t_max)
+    return cfg, (scn.smoke_overrides or {})
+
+
+# ---------------------------------------------------------------------------
+# Every registered scenario: indexed sim == reference sim, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_indexed_sim_matches_reference(name):
+    scn = get_scenario(name)
+    cfg, overrides = _smoke_cfg(scn)
+    a = simulate(scn.make_stream(0, **overrides), cfg)
+    b = simulate_reference(scn.make_stream(0, **overrides), cfg)
+    assert a.total > 0 and a.completed == a.total
+    assert_results_identical(a, b, label=f"{name}: ")
+
+
+def test_multi_run_profiler_persistence_matches_reference():
+    """The paper's repeated-run experiment: one IRM, profiler kept across
+    runs — both sims must evolve the shared profiler state identically."""
+    scn = get_scenario("microscopy")
+    cfg, overrides = _smoke_cfg(scn)
+    irm_a, irm_b = IRM(IRMConfig()), IRM(IRMConfig())
+    for i in range(3):
+        a = simulate(scn.make_stream(i, **overrides), cfg, irm=irm_a)
+        b = simulate_reference(scn.make_stream(i, **overrides), cfg, irm=irm_b)
+        assert_results_identical(a, b, label=f"run{i}: ")
+
+
+def test_fault_injection_matches_reference():
+    """Worker failure requeues in-flight messages at the queue head; the
+    per-image deques must reproduce the reference's insert(0) ordering."""
+    cfg = SimConfig(
+        dt=0.5, cores_per_worker=4, max_workers=5, worker_boot_delay=5.0,
+        pe_start_delay=1.0, container_idle_timeout=1.0, t_max=600.0, seed=0,
+        fail_worker_at=(0, 25.0),
+    )
+    kw = dict(n_images=40, duration_range=(4.0, 8.0))
+    a = simulate(usecase_workload(seed=0, **kw), cfg)
+    b = simulate_reference(usecase_workload(seed=0, **kw), cfg)
+    assert a.completed == a.total  # at-least-once: nothing lost
+    assert_results_identical(a, b, label="fault: ")
+
+
+# ---------------------------------------------------------------------------
+# Property: per-image deque pulling == global-FIFO scan order
+# ---------------------------------------------------------------------------
+
+
+def _scan_pull(queue, image):
+    """The reference P2P pull: first matching message, list.pop(i)."""
+    for i, m in enumerate(queue):
+        if m[0] == image:
+            return queue.pop(i)
+    return None
+
+
+class _DequeQueue:
+    """The indexed master queue: per-image FIFOs keyed by global seq."""
+
+    def __init__(self):
+        self.by_image = {}
+        self.back = 0
+        self.front = 0
+
+    def push_back(self, msg):
+        self.back += 1
+        self.by_image.setdefault(msg[0], deque()).append((self.back, msg))
+
+    def push_front(self, msg):
+        self.front -= 1
+        self.by_image.setdefault(msg[0], deque()).appendleft((self.front, msg))
+
+    def pull(self, image):
+        dq = self.by_image.get(image)
+        if dq:
+            return dq.popleft()[1]
+        return None
+
+
+def _run_trace(trace):
+    """Drive both queue implementations through one interleaved op trace.
+
+    ``trace`` is a list of ("arrive" | "fail" | "pull", image) ops; messages
+    are (image, id) tuples.  Returns both pull sequences.
+    """
+    scan_q, deque_q = [], _DequeQueue()
+    scan_out, deque_out = [], []
+    pulled = []
+    next_id = 0
+    for op, image in trace:
+        if op == "arrive":
+            msg = (image, next_id)
+            next_id += 1
+            scan_q.append(msg)
+            deque_q.push_back(msg)
+        elif op == "fail" and pulled:
+            # a failed worker re-inserts an in-flight message at the head
+            msg = pulled.pop(0)
+            scan_q.insert(0, msg)
+            deque_q.push_front(msg)
+        elif op == "pull":
+            a = _scan_pull(scan_q, image)
+            b = deque_q.pull(image)
+            scan_out.append(a)
+            deque_out.append(b)
+            if a is not None:
+                pulled.append(a)
+    return scan_out, deque_out
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.sampled_from(["arrive", "arrive", "pull", "fail"]),
+            st.sampled_from(["img-a", "img-b", "img-c", "img-d"]),
+        ),
+        min_size=1,
+        max_size=200,
+    )
+)
+@settings(max_examples=200, deadline=None)
+def test_deque_pull_matches_global_fifo_scan(trace):
+    scan_out, deque_out = _run_trace(trace)
+    assert scan_out == deque_out
+
+
+def test_deque_pull_matches_scan_seeded():
+    """Deterministic version of the property (runs without hypothesis)."""
+    rng = np.random.default_rng(1234)
+    images = ["img-a", "img-b", "img-c", "img-d", "img-e"]
+    for _ in range(50):
+        ops = rng.choice(["arrive", "arrive", "pull", "fail"], size=300)
+        imgs = rng.choice(images, size=300)
+        scan_out, deque_out = _run_trace(list(zip(ops, imgs)))
+        assert scan_out == deque_out
+
+
+def test_front_reinsert_order_is_lifo_of_insertions():
+    """insert(0) twice means the second message is pulled first — the
+    deque queue's decreasing negative sequence numbers must agree."""
+    trace = [
+        ("arrive", "img-a"), ("arrive", "img-a"),
+        ("pull", "img-a"), ("pull", "img-a"),   # both in flight
+        ("fail", ""), ("fail", ""),             # requeue msg0 then msg1
+        ("pull", "img-a"), ("pull", "img-a"),
+    ]
+    scan_out, deque_out = _run_trace(trace)
+    assert scan_out == deque_out
+    # after the two front-inserts, msg1 (inserted last) is at the head
+    assert [m[1] for m in scan_out] == [0, 1, 1, 0]
