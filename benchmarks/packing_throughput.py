@@ -11,8 +11,6 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-import numpy as np
-
 from repro.data import (
     bimodal_documents,
     pack_documents,

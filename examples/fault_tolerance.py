@@ -17,8 +17,6 @@ Usage:
 import tempfile
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

@@ -15,7 +15,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

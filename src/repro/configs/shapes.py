@@ -10,7 +10,7 @@ recorded in DESIGN.md §4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Tuple
+from typing import Iterator, List
 
 __all__ = ["ShapeConfig", "SHAPES", "cells_for"]
 

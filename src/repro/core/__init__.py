@@ -10,6 +10,7 @@ from .binpack import (
     AnyFit,
     BestFit,
     Bin,
+    DominantFit,
     FirstFit,
     FirstFitDecreasing,
     FirstFitTree,
@@ -17,13 +18,21 @@ from .binpack import (
     Item,
     NextFit,
     PackResult,
+    VectorAnyFit,
+    VectorBestFit,
     VectorBin,
     VectorFirstFit,
+    VectorFirstFitDecreasing,
     VectorItem,
+    VectorNextFit,
     WorstFit,
+    is_vector_policy,
     lower_bound,
     make_packer,
+    vector_equivalent,
+    vector_lower_bound,
 )
+from .resources import ResourceLike, Resources, as_resources
 from .allocator import AllocatorConfig, BinPackingManager, PackingRun, idle_buffer
 from .irm import IRM, ClusterView, IRMConfig, IRMMetrics
 from .load_predictor import LoadPredictor, LoadPredictorConfig, ScaleDecision
@@ -46,12 +55,23 @@ __all__ = [
     "Item",
     "NextFit",
     "PackResult",
+    "DominantFit",
+    "VectorAnyFit",
+    "VectorBestFit",
     "VectorBin",
     "VectorFirstFit",
+    "VectorFirstFitDecreasing",
     "VectorItem",
+    "VectorNextFit",
     "WorstFit",
+    "is_vector_policy",
     "lower_bound",
     "make_packer",
+    "vector_equivalent",
+    "vector_lower_bound",
+    "ResourceLike",
+    "Resources",
+    "as_resources",
     "AllocatorConfig",
     "BinPackingManager",
     "PackingRun",

@@ -19,10 +19,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
-from .binpack import Bin, Item, lower_bound, make_packer
+import numpy as np
+
+from .binpack import (
+    Bin,
+    Item,
+    VectorBin,
+    VectorItem,
+    is_vector_policy,
+    lower_bound,
+    make_packer,
+    vector_equivalent,
+    vector_lower_bound,
+)
 from .queues import HostRequest
+from .resources import ResourceLike, Resources, as_resources
 
 __all__ = ["AllocatorConfig", "PackingRun", "BinPackingManager", "idle_buffer"]
 
@@ -34,10 +47,15 @@ def idle_buffer(active_workers: int) -> int:
 
 @dataclasses.dataclass
 class AllocatorConfig:
-    # Any-Fit algorithm used for the packing run; First-Fit in the paper.
+    # Packing algorithm for the packing run; First-Fit in the paper.  Any
+    # ``make_packer`` name — scalar Any-Fit or a vector packer.  A scalar
+    # name on a multi-resource cluster is auto-promoted to its vector
+    # generalization (``binpack.vector_equivalent``).
     algorithm: str = "first-fit-tree"
-    # Bin capacity: 1.0 == 100% of a worker's CPU.
-    capacity: float = 1.0
+    # Bin capacity: 1.0 == 100% of a worker's CPU.  On a multi-resource
+    # cluster this may be a ``Resources`` vector (a float means every
+    # dimension has that capacity).
+    capacity: Union[float, Resources] = 1.0
     # Rate of packing runs, seconds (paper: "at a configurable rate").
     pack_interval: float = 2.0
     # Keep a log-proportional idle-worker buffer (paper Section V-A).
@@ -51,14 +69,19 @@ class AllocatorConfig:
 
 @dataclasses.dataclass
 class PackingRun:
-    """Result of one periodic bin-packing run."""
+    """Result of one periodic bin-packing run.
+
+    ``scheduled_load`` entries are floats on the scalar path and
+    ``Resources`` vectors on the multi-resource path; ``ideal_bins`` is the
+    L1 lower bound (dominant-dimension L1 for vectors).
+    """
 
     t: float
     placements: List[HostRequest]  # requests with ``target_worker`` attached
     num_bins: int                  # bins used by this packing solution
     target_workers: int            # num_bins + idle buffer
     ideal_bins: int                # L1 lower bound for the packed load
-    scheduled_load: List[float]    # per-bin scheduled usage after the run
+    scheduled_load: List[ResourceLike]  # per-bin scheduled usage after the run
 
 
 class BinPackingManager:
@@ -79,7 +102,7 @@ class BinPackingManager:
         self,
         t: float,
         requests: Sequence[HostRequest],
-        worker_loads: Sequence[float],
+        worker_loads: Sequence[ResourceLike],
     ) -> PackingRun:
         """One packing run.
 
@@ -88,8 +111,20 @@ class BinPackingManager:
         hosts.  Active workers are open bins pre-filled to that level; queued
         requests are packed in FIFO order; bins opened beyond the active
         workers represent the scale-up the IRM will request.
+
+        The run is *vector* when anything multi-dimensional reaches it: a
+        ``Resources`` capacity, a vector packing policy, or ``Resources``
+        loads/size estimates.  A scalar run is bit-for-bit the paper's
+        behaviour.
         """
         cfg = self.config
+        if (
+            isinstance(cfg.capacity, Resources)
+            or is_vector_policy(cfg.algorithm)
+            or any(isinstance(load, Resources) for load in worker_loads)
+            or any(isinstance(r.size_estimate, Resources) for r in requests)
+        ):
+            return self._run_vector(t, requests, worker_loads)
         self._last_run_t = t
         cap = cfg.capacity - cfg.headroom
         bins = [Bin(cfg.capacity, used=min(load, cfg.capacity)) for load in worker_loads]
@@ -121,6 +156,83 @@ class BinPackingManager:
             target_workers=target,
             ideal_bins=ideal,
             scheduled_load=[b.used for b in packer.bins],
+        )
+        self.runs.append(run)
+        return run
+
+    # -- multi-resource packing run (paper Sec. VII future work) -------------
+    def _resolve_dims(
+        self,
+        requests: Sequence[HostRequest],
+        worker_loads: Sequence[ResourceLike],
+    ) -> tuple:
+        """Dimension names for this run: config capacity wins, else the
+        first ``Resources`` seen among loads / request estimates."""
+        if isinstance(self.config.capacity, Resources):
+            return self.config.capacity.dims
+        for load in worker_loads:
+            if isinstance(load, Resources):
+                return load.dims
+        for r in requests:
+            if isinstance(r.size_estimate, Resources):
+                return r.size_estimate.dims
+        return ("cpu",)
+
+    def _run_vector(
+        self,
+        t: float,
+        requests: Sequence[HostRequest],
+        worker_loads: Sequence[ResourceLike],
+    ) -> PackingRun:
+        """Vector bin-packing run: pre-filled *vector* bins, per-dimension
+        headroom, dominant-dimension lower bound."""
+        cfg = self.config
+        self._last_run_t = t
+        dims = self._resolve_dims(requests, worker_loads)
+        D = len(dims)
+        cap = as_resources(cfg.capacity, dims).values if isinstance(
+            cfg.capacity, Resources
+        ) else np.full(D, float(cfg.capacity))
+        # per-dimension item ceiling: capacity minus headroom (the scalar
+        # semantics — bins keep full capacity, items are clamped)
+        item_hi = cap - cfg.headroom
+
+        bins = [
+            VectorBin(
+                tuple(cap),
+                used=np.minimum(as_resources(load, dims).values, cap),
+            )
+            for load in worker_loads
+        ]
+        algorithm = vector_equivalent(cfg.algorithm)
+        packer = make_packer(algorithm, capacity=tuple(cap), bins=bins)
+
+        items: List[VectorItem] = []
+        for req in requests:
+            size = as_resources(req.size_estimate, dims).values
+            size = np.minimum(size, item_hi)
+            size = np.maximum(size, 0.0)
+            size[0] = max(size[0], min(1e-3, item_hi[0]))
+            items.append(VectorItem(tuple(float(s) for s in size), tag=req.req_id))
+        result = packer.pack(items)
+        placements: List[HostRequest] = []
+        for req, idx in zip(requests, result.assignments):
+            req.target_worker = idx
+            placements.append(req)
+
+        used_bins = sum(
+            1 for b in packer.bins if any(u > 1e-9 for u in b.used)
+        )
+        ideal = vector_lower_bound([b.used for b in packer.bins], tuple(cap))
+        target = used_bins + (idle_buffer(used_bins) if cfg.keep_idle_buffer else 0)
+
+        run = PackingRun(
+            t=t,
+            placements=placements,
+            num_bins=used_bins,
+            target_workers=target,
+            ideal_bins=ideal,
+            scheduled_load=[Resources(dims, b.used) for b in packer.bins],
         )
         self.runs.append(run)
         return run

@@ -46,9 +46,17 @@ __all__ = [
     "Harmonic",
     "VectorItem",
     "VectorBin",
+    "VectorAnyFit",
     "VectorFirstFit",
+    "VectorBestFit",
+    "VectorNextFit",
+    "DominantFit",
+    "VectorFirstFitDecreasing",
     "lower_bound",
+    "vector_lower_bound",
     "make_packer",
+    "is_vector_policy",
+    "vector_equivalent",
     "ASYMPTOTIC_RATIO",
 ]
 
@@ -395,9 +403,18 @@ class VectorItem:
 class VectorBin:
     __slots__ = ("capacity", "used", "items")
 
-    def __init__(self, capacity: tuple[float, ...]):
+    def __init__(
+        self,
+        capacity: tuple[float, ...],
+        used: Optional[Sequence[float]] = None,
+    ):
         self.capacity = tuple(float(c) for c in capacity)
-        self.used = tuple(0.0 for _ in capacity)
+        if used is None:
+            self.used = tuple(0.0 for _ in capacity)
+        else:
+            if len(tuple(used)) != len(self.capacity):
+                raise ValueError("used vector must match capacity dimensions")
+            self.used = tuple(float(u) for u in used)
         self.items: list[VectorItem] = []
 
     @property
@@ -414,7 +431,65 @@ class VectorBin:
         self.used = tuple(u + s for u, s in zip(self.used, item.sizes))
 
 
-class VectorFirstFit:
+def _normalize_capacity(capacity) -> tuple[float, ...]:
+    """Accept a float (all-dims capacity 1-vector), tuple, or Resources."""
+    if isinstance(capacity, (int, float)):
+        return (float(capacity),)
+    as_tuple = getattr(capacity, "as_tuple", None)
+    if as_tuple is not None:  # core.resources.Resources (duck-typed: no import
+        return as_tuple()     # cycle — binpack stays below resources)
+    return tuple(float(c) for c in capacity)
+
+
+class VectorAnyFit:
+    """Shared loop for online vector packers (mirrors ``AnyFit``).
+
+    Like the scalar Any-Fit group, supports pre-filled open bins (active
+    workers in the IRM) and opens a new bin only when ``_choose`` finds no
+    feasible active bin.
+    """
+
+    name = "vector-any-fit"
+
+    def __init__(
+        self,
+        capacity=(1.0,),
+        bins: Optional[list[VectorBin]] = None,
+    ):
+        self.capacity = _normalize_capacity(capacity)
+        self.bins: list[VectorBin] = list(bins) if bins is not None else []
+
+    # -- search criterion ---------------------------------------------------
+    def _choose(self, item: VectorItem) -> Optional[int]:
+        raise NotImplementedError
+
+    # -- shared loop --------------------------------------------------------
+    def pack_one(self, item: VectorItem) -> int:
+        if any(s > c + _EPS for s, c in zip(item.sizes, self.capacity)):
+            raise ValueError(
+                f"item sizes {item.sizes} exceed bin capacity {self.capacity}"
+            )
+        idx = self._choose(item)
+        if idx is None:
+            self.bins.append(VectorBin(self.capacity))
+            idx = len(self.bins) - 1
+        self.bins[idx].add(item)
+        return idx
+
+    def pack(self, items: Iterable[VectorItem]) -> PackResult:
+        before = len(self.bins)
+        assignments = [self.pack_one(it) for it in items]
+        return PackResult(
+            assignments=assignments,
+            bins=self.bins,  # type: ignore[arg-type]
+            opened=len(self.bins) - before,
+        )
+
+    def reset(self) -> None:
+        self.bins = []
+
+
+class VectorFirstFit(VectorAnyFit):
     """First-Fit for vector bin-packing with pluggable tie-break heuristics.
 
     ``heuristic``:
@@ -429,14 +504,14 @@ class VectorFirstFit:
 
     def __init__(
         self,
-        capacity: tuple[float, ...] = (1.0,),
+        capacity=(1.0,),
         heuristic: str = "first",
+        bins: Optional[list[VectorBin]] = None,
     ):
         if heuristic not in ("first", "dot", "l2"):
             raise ValueError(f"unknown heuristic {heuristic!r}")
-        self.capacity = tuple(capacity)
+        super().__init__(capacity, bins)
         self.heuristic = heuristic
-        self.bins: list[VectorBin] = []
 
     def _score(self, b: VectorBin, item: VectorItem) -> float:
         if self.heuristic == "dot":
@@ -445,26 +520,116 @@ class VectorFirstFit:
         resid = [f - s for f, s in zip(b.free, item.sizes)]
         return -math.sqrt(sum(r * r for r in resid))
 
-    def pack_one(self, item: VectorItem) -> int:
+    def _choose(self, item: VectorItem) -> Optional[int]:
         feasible = [i for i, b in enumerate(self.bins) if b.fits(item.sizes)]
         if not feasible:
-            self.bins.append(VectorBin(self.capacity))
-            idx = len(self.bins) - 1
-        elif self.heuristic == "first":
-            idx = feasible[0]
-        else:
-            idx = max(feasible, key=lambda i: self._score(self.bins[i], item))
-        self.bins[idx].add(item)
-        return idx
+            return None
+        if self.heuristic == "first":
+            return feasible[0]
+        return max(feasible, key=lambda i: self._score(self.bins[i], item))
 
-    def pack(self, items: Iterable[VectorItem]) -> PackResult:
+
+class VectorBestFit(VectorAnyFit):
+    """Best-Fit generalized: minimize total residual free fraction.
+
+    Among feasible bins, picks the one whose summed post-placement residual
+    ``sum_d (free_d - s_d) / cap_d`` is smallest (ties: lowest index) — the
+    tightest bin across all dimensions at once.
+    """
+
+    name = "vector-best-fit"
+
+    def _choose(self, item: VectorItem) -> Optional[int]:
+        best, best_resid = None, math.inf
+        for i, b in enumerate(self.bins):
+            if not b.fits(item.sizes):
+                continue
+            resid = sum(
+                (f - s) / c
+                for f, s, c in zip(b.free, item.sizes, b.capacity)
+            )
+            if resid < best_resid:
+                best, best_resid = i, resid
+        return best
+
+
+class VectorNextFit(VectorAnyFit):
+    """Next-Fit generalized: only the most recently opened bin is considered."""
+
+    name = "vector-next-fit"
+
+    def _choose(self, item: VectorItem) -> Optional[int]:
+        if self.bins and self.bins[-1].fits(item.sizes):
+            return len(self.bins) - 1
+        return None
+
+
+class DominantFit(VectorAnyFit):
+    """Dominant-resource heuristic.
+
+    Classifies the item by its *dominant* dimension (largest ``s_d / cap_d``
+    utilization — dominant-resource fairness's notion of an item's share)
+    and places it in the feasible bin with the most free capacity in that
+    dimension (ties: lowest index).  Spreads bottleneck demand the way
+    Worst-Fit spreads scalar load, but per resource, so CPU-heavy and
+    memory-heavy items naturally interleave onto complementary bins.
+    """
+
+    name = "dominant-fit"
+
+    def _choose(self, item: VectorItem) -> Optional[int]:
+        d = max(
+            range(len(item.sizes)),
+            key=lambda j: item.sizes[j] / max(self.capacity[j], 1e-12),
+        )
+        best, best_free = None, -math.inf
+        for i, b in enumerate(self.bins):
+            if b.fits(item.sizes) and b.free[d] > best_free:
+                best, best_free = i, b.free[d]
+        return best
+
+
+class VectorFirstFitDecreasing:
+    """Offline FFD for vectors: sort by dominant utilization, then First-Fit.
+
+    The quality reference for the vector packers (as scalar FFD is for the
+    Any-Fit group).  In the IRM it acts per packing run: the drained request
+    batch is reordered largest-dominant-share-first before placement, which
+    is legal because a packing run sees its whole batch at once.
+    """
+
+    name = "vector-first-fit-decreasing"
+
+    def __init__(
+        self,
+        capacity=(1.0,),
+        bins: Optional[list[VectorBin]] = None,
+    ):
+        self.capacity = _normalize_capacity(capacity)
+        self.bins: list[VectorBin] = list(bins) if bins is not None else []
+
+    def pack(self, items: Sequence[VectorItem]) -> PackResult:
+        items = list(items)
+        caps = [max(c, 1e-12) for c in self.capacity]
+
+        def dominant(it: VectorItem) -> float:
+            return max(s / c for s, c in zip(it.sizes, caps))
+
+        order = sorted(range(len(items)), key=lambda i: -dominant(items[i]))
         before = len(self.bins)
-        assignments = [self.pack_one(it) for it in items]
+        vff = VectorFirstFit(self.capacity, bins=self.bins)
+        assignments = [0] * len(items)
+        for i in order:
+            assignments[i] = vff.pack_one(items[i])
+        self.bins = vff.bins
         return PackResult(
             assignments=assignments,
             bins=self.bins,  # type: ignore[arg-type]
             opened=len(self.bins) - before,
         )
+
+    def reset(self) -> None:
+        self.bins = []
 
 
 # ---------------------------------------------------------------------------
@@ -483,6 +648,27 @@ def lower_bound(sizes: Iterable[float], capacity: float = 1.0) -> int:
     return int(math.ceil(total / capacity - _EPS))
 
 
+def vector_lower_bound(
+    size_vectors: Iterable[Sequence[float]],
+    capacity: Sequence[float] = (1.0,),
+) -> int:
+    """Dominant-dimension L1 lower bound on the optimal vector bin count.
+
+    Each dimension gives an independent L1 bound ``ceil(sum_d / cap_d)``;
+    the optimum can do no better than the worst (dominant) dimension.
+    """
+    caps = _normalize_capacity(capacity)
+    totals = [0.0] * len(caps)
+    for sizes in size_vectors:
+        for d, s in enumerate(sizes):
+            totals[d] += s
+    best = 0
+    for total, cap in zip(totals, caps):
+        if total > 0:
+            best = max(best, int(math.ceil(total / cap - _EPS)))
+    return best
+
+
 _PACKERS: dict[str, Callable[..., AnyFit]] = {
     "first-fit": FirstFit,
     "first-fit-tree": FirstFitTree,
@@ -492,13 +678,56 @@ _PACKERS: dict[str, Callable[..., AnyFit]] = {
     "harmonic": Harmonic,
 }
 
+_VECTOR_PACKERS: dict[str, Callable[..., Any]] = {
+    "vector-first-fit": VectorFirstFit,
+    "vector-best-fit": VectorBestFit,
+    "vector-next-fit": VectorNextFit,
+    "dominant-fit": DominantFit,
+    "vector-ffd": VectorFirstFitDecreasing,
+}
 
-def make_packer(name: str, capacity: float = 1.0, **kw: Any) -> AnyFit:
-    """Factory used by the IRM config (``irm.packing_algorithm``)."""
+# Scalar policy -> its vector generalization.  Used by the allocator to
+# auto-vectorize when a scalar-configured IRM is pointed at a
+# multi-resource cluster (worker loads arrive as Resources vectors).
+_VECTOR_EQUIVALENT = {
+    "first-fit": "vector-first-fit",
+    "first-fit-tree": "vector-first-fit",
+    "best-fit": "vector-best-fit",
+    "next-fit": "vector-next-fit",
+    "worst-fit": "dominant-fit",
+}
+
+
+def is_vector_policy(name: str) -> bool:
+    """True if ``name`` is a registered multi-dimensional packer."""
+    return name in _VECTOR_PACKERS
+
+
+def vector_equivalent(name: str) -> str:
+    """The vector packer to use for a (possibly scalar) policy name."""
+    if name in _VECTOR_PACKERS:
+        return name
     try:
-        cls = _PACKERS[name]
+        return _VECTOR_EQUIVALENT[name]
     except KeyError:
         raise ValueError(
-            f"unknown packing algorithm {name!r}; options: {sorted(_PACKERS)}"
+            f"packing algorithm {name!r} has no vector equivalent; "
+            f"vector options: {sorted(_VECTOR_PACKERS)}"
         ) from None
+
+
+def make_packer(name: str, capacity: Any = 1.0, **kw: Any) -> Any:
+    """Factory used by the IRM config (``irm.packing_algorithm``).
+
+    Resolves both the scalar Any-Fit family and the vector packers; vector
+    names accept a float capacity (normalized to a 1-vector), a tuple, or a
+    ``Resources``.
+    """
+    cls = _PACKERS.get(name) or _VECTOR_PACKERS.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown packing algorithm {name!r}; "
+            f"scalar options: {sorted(_PACKERS)}; "
+            f"vector options: {sorted(_VECTOR_PACKERS)}"
+        )
     return cls(capacity=capacity, **kw)

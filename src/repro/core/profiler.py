@@ -21,9 +21,23 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, Iterable, Mapping, Optional, Tuple
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
 
-__all__ = ["ProfilerConfig", "MasterProfiler", "WorkerProbe"]
+from .resources import ResourceLike, Resources, as_resources
+
+__all__ = ["ProfilerConfig", "MasterProfiler", "WorkerProbe", "clamp_estimate"]
+
+
+def clamp_estimate(est: ResourceLike, config: "ProfilerConfig") -> ResourceLike:
+    """Clamp a profiled size into the packer's valid item domain.
+
+    Scalar estimates clamp to [min_size, max_size] exactly as before; vector
+    estimates clamp per dimension (CPU keeps the min_size floor so items stay
+    in the paper's (0, 1] domain; auxiliary dimensions may be zero).
+    """
+    if isinstance(est, Resources):
+        return est.clamp(config.min_size, config.max_size)
+    return min(config.max_size, max(config.min_size, est))
 
 
 @dataclasses.dataclass
@@ -50,37 +64,70 @@ class MasterProfiler:
         # measurement arrives (every report_interval), but the simulation
         # hot path queries it for every PE and backlog message every tick —
         # cache per image, invalidate on observe().
-        self._est_cache: Dict[str, float] = {}
+        self._est_cache: Dict[str, ResourceLike] = {}
+        # None => scalar (the paper's CPU-fraction profile).  Set by a
+        # multi-resource cluster so defaults for unseen images are vectors.
+        self._dims: Optional[Tuple[str, ...]] = None
+
+    # -- multi-resource mode -------------------------------------------------
+    def set_resource_dims(self, dims: Sequence[str]) -> None:
+        """Switch default estimates to ``Resources`` over ``dims``.
+
+        A profiler that already holds samples keeps them: scalar samples
+        become CPU-only vectors and existing vectors re-align, so a
+        persistent IRM (the paper's cross-run profile) can carry its learned
+        profile from a scalar cluster onto a multi-resource one without
+        mixing floats and vectors inside one moving-average window.
+        """
+        dims = tuple(dims)
+        if dims == self._dims:
+            return
+        self._dims = dims
+        for image, dq in self._samples.items():
+            self._samples[image] = deque(
+                (as_resources(v, dims) for v in dq), maxlen=dq.maxlen
+            )
+        self._est_cache.clear()
+
+    @property
+    def resource_dims(self) -> Optional[Tuple[str, ...]]:
+        return self._dims
+
+    def _default_estimate(self) -> ResourceLike:
+        """First-guess size for a never-before-seen workload class."""
+        if self._dims is None:
+            return self.config.default_size
+        return Resources.full(self._dims, self.config.default_size)
 
     # -- ingest --------------------------------------------------------------
-    def observe(self, image: str, value: float) -> None:
+    def observe(self, image: str, value: ResourceLike) -> None:
         """Record one aggregated measurement for a workload class."""
         dq = self._samples.get(image)
         if dq is None:
             dq = deque(maxlen=self.config.window)
             self._samples[image] = dq
             self._count[image] = 0
-        dq.append(float(value))
+        dq.append(value if isinstance(value, Resources) else float(value))
         self._count[image] += 1
         self._est_cache.pop(image, None)
 
-    def observe_report(self, report: Mapping[str, float]) -> None:
+    def observe_report(self, report: Mapping[str, ResourceLike]) -> None:
         """Ingest a worker probe report: {image: mean usage on that worker}."""
         for image, value in report.items():
             self.observe(image, value)
 
     # -- query ---------------------------------------------------------------
-    def estimate(self, image: str) -> float:
+    def estimate(self, image: str) -> ResourceLike:
         """Moving-average item size for ``image`` (default guess if unseen)."""
         cached = self._est_cache.get(image)
         if cached is not None:
             return cached
         dq = self._samples.get(image)
         if not dq:
-            est = self.config.default_size
+            est = self._default_estimate()
         else:
             est = sum(dq) / len(dq)
-        est = min(self.config.max_size, max(self.config.min_size, est))
+        est = clamp_estimate(est, self.config)
         self._est_cache[image] = est
         return est
 

@@ -25,6 +25,7 @@ from collections import deque
 from typing import Any, Callable, Deque, Iterator, List, Optional
 
 from .profiler import MasterProfiler
+from .resources import ResourceLike
 
 __all__ = ["HostRequest", "ContainerQueue", "AllocationQueue"]
 
@@ -33,10 +34,16 @@ _req_ids = itertools.count()
 
 @dataclasses.dataclass
 class HostRequest:
-    """A request to host one PE container of class ``image``."""
+    """A request to host one PE container of class ``image``.
+
+    ``size_estimate`` is the profiled size the bin-packing run uses: a plain
+    float (the paper's CPU fraction) or a ``Resources`` vector on a
+    multi-resource cluster.  ``refresh_estimates`` keeps it in whichever
+    shape the profiler currently produces.
+    """
 
     image: str
-    size_estimate: float = 0.5
+    size_estimate: ResourceLike = 0.5
     ttl: int = 3
     target_worker: Optional[int] = None
     enqueue_time: float = 0.0

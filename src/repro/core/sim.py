@@ -58,9 +58,11 @@ import numpy as np
 from .irm import IRM, IRMConfig
 from .profiler import WorkerProbe
 from .queues import HostRequest
+from .resources import Resources
 from .workloads import Message, Stream
 
-__all__ = ["SimConfig", "SimResult", "SimCluster", "simulate"]
+__all__ = ["SimConfig", "SimResult", "SimCluster", "simulate",
+           "worker_fits_message"]
 
 
 class PEState(enum.Enum):
@@ -91,6 +93,40 @@ class SimConfig:
     seed: int = 0
     # if True, a worker failure is injected (fault-tolerance tests)
     fail_worker_at: Optional[Tuple[int, float]] = None  # (worker idx, time)
+    # Resource dimensions of a worker.  ("cpu",) is the paper's scalar model
+    # (bit-for-bit unchanged).  More dimensions (dim 0 must stay "cpu")
+    # switch the cluster to vector mode: messages carry per-dimension draws
+    # (``Message.resources``), the profiler learns per-dimension estimates,
+    # the allocator packs vector bins, and non-CPU dimensions are *rigid*
+    # (a worker never overcommits them — the congestion gate below).
+    resource_dims: Tuple[str, ...] = ("cpu",)
+
+
+def worker_fits_message(pes, msg: "Message", dims: Tuple[str, ...],
+                        t: float) -> bool:
+    """Non-CPU congestion gate: can this worker take ``msg`` right now?
+
+    CPU stays fungible (the paper lets measured CPU overcommit and clip);
+    auxiliary dimensions (memory, accelerator) are rigid, so an idle PE may
+    only pull a message while every non-CPU dimension stays within worker
+    capacity.  A dimension's committed usage counts messages that are still
+    *running* at ``t`` (``done_t > t``): both simulation implementations
+    agree on that set regardless of the order they process completions in,
+    which keeps the indexed and reference paths bit-for-bit identical.
+
+    Shared by ``sim`` and ``sim_reference`` so the two can never drift.
+    """
+    mres = msg.resources
+    for d in dims[1:]:
+        need = mres.get(d, 0.0) if mres else 0.0
+        committed = 0.0
+        for pe in pes:
+            pmsg = pe.msg
+            if pmsg is not None and pmsg.done_t > t and pmsg.resources:
+                committed += pmsg.resources.get(d, 0.0)
+        if committed + need > 1.0 + 1e-9:
+            return False
+    return True
 
 
 class SimPE:
@@ -133,6 +169,10 @@ class SimResult:
     total: int
     makespan: float                 # time when the last message finished
     messages: List[Message]
+    # -- multi-resource extension (None / ("cpu",) on the scalar path) -------
+    resource_dims: Tuple[str, ...] = ("cpu",)
+    measured_res: Optional[np.ndarray] = None   # (T, max_workers, D)
+    scheduled_res: Optional[np.ndarray] = None  # (T, max_workers, D)
 
     @property
     def error(self) -> np.ndarray:
@@ -165,6 +205,18 @@ class SimCluster:
         self.requested_target = 0
         self.max_done_t = 0.0  # running max over completed messages
         self._failed: set = set()
+        # ---- multi-resource mode ------------------------------------------
+        self._dims = tuple(config.resource_dims)
+        self._multi = len(self._dims) > 1
+        if self._multi:
+            if self._dims[0] != "cpu":
+                raise ValueError(
+                    f"resource_dims[0] must be 'cpu', got {self._dims}"
+                )
+            # unseen-image defaults become Resources vectors
+            irm.profiler.set_resource_dims(self._dims)
+        # per-dimension measured usage (n_workers, D), filled by measure()
+        self.last_dim_measure: Optional[np.ndarray] = None
         # ---- master queue: per-image FIFO deques of (seq, message) --------
         # Each deque is sorted ascending by the global arrival sequence
         # number, so its head is the first message of that image in global
@@ -232,7 +284,7 @@ class SimCluster:
         n = float(self._qlen)
         return {img: cnt / n for _, img, cnt in heads}
 
-    def worker_scheduled_loads(self) -> List[float]:
+    def worker_scheduled_loads(self) -> List:
         # Bins are pre-filled with the *current* profiled usage of the PEs
         # they host — the paper propagates updated moving averages to all
         # scheduling state, not placement-time snapshots (Section V-B.3).
@@ -240,8 +292,27 @@ class SimCluster:
         # stays in PE-list order so the float sum matches the reference.
         est = self.irm.profiler.estimate
         cache: Dict[str, float] = {}
-        out = []
         stopped = PEState.STOPPED
+        if self._multi:
+            # vector mode: per-dimension float64 accumulation, same order
+            D = len(self._dims)
+            vout: List[Resources] = []
+            for w in self.workers:
+                if w.state is WorkerState.OFF:
+                    vout.append(Resources(self._dims, np.zeros(D)))
+                    continue
+                load = np.zeros(D)
+                for pe in w.pes:
+                    if pe.state is stopped:
+                        continue
+                    img = pe.image
+                    v = cache.get(img)
+                    if v is None:
+                        v = cache[img] = est(img).values
+                    load = load + v
+                vout.append(Resources(self._dims, load))
+            return vout
+        out = []
         for w in self.workers:
             if w.state is WorkerState.OFF:
                 out.append(0.0)
@@ -257,6 +328,17 @@ class SimCluster:
                 load += v
             out.append(load)
         return out
+
+    def backlog_resource_demand(self) -> Optional[Resources]:
+        """Aggregate estimated demand of the backlog head (vector mode)."""
+        if not self._multi:
+            return None
+        est = self.irm.profiler.estimate
+        total: Optional[Resources] = None
+        for msg in self.backlog_head(64):
+            v = est(msg.image)
+            total = v if total is None else total + v
+        return total
 
     def try_start_pe(self, req: HostRequest) -> bool:
         idx = req.target_worker
@@ -369,9 +451,16 @@ class SimCluster:
         if self._idle:
             timeout = cfg.container_idle_timeout
             img_queues = self._img_queues
+            multi = self._multi
             for key in sorted(self._idle):
                 pe = self._idle[key]
                 dq = img_queues.get(pe.image)
+                # vector mode: rigid non-CPU dimensions gate the P2P pull
+                # (head-blocking FIFO: a blocked head is not skipped)
+                if dq and multi and not worker_fits_message(
+                    self.workers[key[0]].pes, dq[0][1], self._dims, t
+                ):
+                    dq = None
                 if dq:
                     _, m = dq.popleft()
                     self._qlen -= 1
@@ -393,8 +482,63 @@ class SimCluster:
                 w.pes = [pe for pe in w.pes if pe.state is not PEState.STOPPED]
             self._dirty_workers.clear()
 
+    def _measure_multi(self) -> np.ndarray:
+        """Vector-mode measurement: per-dimension usage per worker.
+
+        CPU (dimension 0) keeps the scalar path's noisy draw — same RNG
+        sequence — while auxiliary dimensions are measured exactly (memory
+        and accelerator reservations are deterministic).  Fills
+        ``last_dim_measure`` (n_workers, D) and returns the CPU column.
+        """
+        cfg = self.cfg
+        dims = self._dims
+        D = len(dims)
+        cores_per_worker = float(cfg.cores_per_worker)
+        noise_std = cfg.cpu_noise_std * cfg.cores_per_worker
+        idle_draw = min(max(cfg.idle_pe_cpu_cores, 0.0), cores_per_worker)
+        rng_normal = self.rng.normal
+        busy, idle = PEState.BUSY, PEState.IDLE
+        n = max(len(self.workers), 1)
+        out = np.zeros(n)
+        dim_out = np.zeros((n, D))
+        for w in self.workers:
+            if w.state != WorkerState.ACTIVE:
+                continue
+            totals = np.zeros(D)
+            acc, counts = w.probe.accumulators()
+            for pe in w.pes:
+                vec = np.zeros(D)
+                if pe.state is busy and pe.msg is not None:
+                    draw = pe.msg.cpu_cores * float(rng_normal(1.0, noise_std))
+                    if draw < 0.0:
+                        draw = 0.0
+                    elif draw > cores_per_worker:
+                        draw = cores_per_worker
+                    vec[0] = draw / cores_per_worker
+                    mres = pe.msg.resources
+                    if mres:
+                        for j in range(1, D):
+                            vec[j] = mres.get(dims[j], 0.0)
+                elif pe.state is idle:
+                    vec[0] = idle_draw / cores_per_worker
+                totals = totals + vec
+                img = pe.image
+                if img in acc:
+                    acc[img] = acc[img] + vec
+                    counts[img] += 1
+                else:
+                    acc[img] = vec
+                    counts[img] = 1
+            clipped = np.minimum(totals, 1.0)
+            dim_out[w.idx] = clipped
+            out[w.idx] = clipped[0]
+        self.last_dim_measure = dim_out
+        return out
+
     def measure(self) -> np.ndarray:
         """Instantaneous measured CPU per worker (fraction of the worker)."""
+        if self._multi:
+            return self._measure_multi()
         cfg = self.cfg
         cores_per_worker = float(cfg.cores_per_worker)
         noise_std = cfg.cpu_noise_std * cfg.cores_per_worker
@@ -435,10 +579,17 @@ class SimCluster:
         return out
 
     def flush_probes(self) -> None:
+        dims = self._dims if self._multi else None
         for w in self.workers:
             if w.state == WorkerState.ACTIVE and w.pes:
                 report = w.probe.report()
                 if report:
+                    if dims is not None:
+                        # vector mode accumulates ndarrays; name them
+                        report = {
+                            img: Resources(dims, vec)
+                            for img, vec in report.items()
+                        }
                     self.irm.ingest_report(report)
 
 
@@ -476,6 +627,11 @@ def simulate(
     target = np.empty(cap, np.int64)
     ideal = np.empty(cap, np.int64)
     pe_count = np.empty(cap, np.int64)
+    dims = cluster._dims
+    multi = cluster._multi
+    D = len(dims)
+    measured_res = np.zeros((cap, cfg.max_workers, D)) if multi else None
+    scheduled_res = np.zeros((cap, cfg.max_workers, D)) if multi else None
 
     W = cfg.max_workers
     workers = cluster.workers
@@ -508,6 +664,11 @@ def simulate(
             target = np.concatenate([target, np.empty(cap, np.int64)])
             ideal = np.concatenate([ideal, np.empty(cap, np.int64)])
             pe_count = np.concatenate([pe_count, np.empty(cap, np.int64)])
+            if multi:
+                measured_res = np.concatenate(
+                    [measured_res, np.zeros((cap, W, D))])
+                scheduled_res = np.concatenate(
+                    [scheduled_res, np.zeros((cap, W, D))])
             cap *= 2
 
         times[n] = t
@@ -515,31 +676,64 @@ def simulate(
         measured[n, :k] = m[:k]
         sl = cluster.worker_scheduled_loads()
         srow = scheduled[n]
-        for j in range(min(len(sl), W)):
-            v = sl[j]
-            srow[j] = v if v < 1.0 else 1.0
+        if multi:
+            dm = cluster.last_dim_measure
+            measured_res[n, :k] = dm[:k]
+            for j in range(min(len(sl), W)):
+                v = sl[j].values
+                c = v[0]
+                srow[j] = c if c < 1.0 else 1.0
+                scheduled_res[n, j] = np.minimum(v, 1.0)
+        else:
+            for j in range(min(len(sl), W)):
+                v = sl[j]
+                srow[j] = v if v < 1.0 else 1.0
 
         qlen[n] = cluster._qlen
-        n_active = 0
-        n_pes = 0
-        busy_load = 0.0
-        for w in workers:
-            n_pes += len(w.pes)
-            if w.state is ACTIVE_STATE:
-                n_active += 1
-                for pe in w.pes:
-                    busy_load += pe.estimate
-        active[n] = n_active
-        target[n] = cluster.requested_target
-        pe_count[n] = n_pes
-        # ideal bins for the *current* in-system load (backlog + busy PEs)
-        backlog_load = 0.0
-        for msg in cluster.backlog_head(64):
-            backlog_load += estimate(msg.image)
-        ideal[n] = int(math.ceil(
-            busy_load + (backlog_load if backlog_load < 64.0 else 64.0)
-        ))
-        n += 1
+        if multi:
+            n_active = 0
+            n_pes = 0
+            busy_vec = np.zeros(D)
+            for w in workers:
+                n_pes += len(w.pes)
+                if w.state is ACTIVE_STATE:
+                    n_active += 1
+                    for pe in w.pes:
+                        busy_vec = busy_vec + pe.estimate.values
+            active[n] = n_active
+            target[n] = cluster.requested_target
+            pe_count[n] = n_pes
+            # ideal bins: dominant-dimension bound on the in-system load
+            backlog_vec = np.zeros(D)
+            for msg in cluster.backlog_head(64):
+                backlog_vec = backlog_vec + estimate(msg.image).values
+            ideal[n] = int(max(
+                math.ceil(busy_vec[j] + (backlog_vec[j]
+                                         if backlog_vec[j] < 64.0 else 64.0))
+                for j in range(D)
+            ))
+            n += 1
+        else:
+            n_active = 0
+            n_pes = 0
+            busy_load = 0.0
+            for w in workers:
+                n_pes += len(w.pes)
+                if w.state is ACTIVE_STATE:
+                    n_active += 1
+                    for pe in w.pes:
+                        busy_load += pe.estimate
+            active[n] = n_active
+            target[n] = cluster.requested_target
+            pe_count[n] = n_pes
+            # ideal bins for the *current* in-system load (backlog + busy PEs)
+            backlog_load = 0.0
+            for msg in cluster.backlog_head(64):
+                backlog_load += estimate(msg.image)
+            ideal[n] = int(math.ceil(
+                busy_load + (backlog_load if backlog_load < 64.0 else 64.0)
+            ))
+            n += 1
 
         done = len(cluster.completed)
         if done >= total and next_batch >= n_batches and cluster._qlen == 0:
@@ -559,4 +753,7 @@ def simulate(
         total=total,
         makespan=cluster.max_done_t,
         messages=[m for _, b in stream.batches for m in b],
+        resource_dims=dims,
+        measured_res=measured_res[:n].copy() if multi else None,
+        scheduled_res=scheduled_res[:n].copy() if multi else None,
     )

@@ -17,6 +17,11 @@ recorded time series grow as Python lists.  It exists for two reasons:
 Do not optimize this module; it is the frozen baseline.  The shared
 dataclasses (``SimConfig``, ``SimResult``) and the state enums are imported
 from ``sim.py`` so results from both paths are directly comparable.
+
+Multi-resource (vector) mode mirrors ``sim.py``'s semantics in this
+module's full-scan style — same pull gating (the shared
+``worker_fits_message``), same RNG draw order, same float-summation order —
+so the equivalence suite pins the vector path exactly like the scalar one.
 """
 
 from __future__ import annotations
@@ -26,9 +31,10 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .irm import IRM, IRMConfig
-from .profiler import MasterProfiler
+from .profiler import MasterProfiler, clamp_estimate
 from .queues import HostRequest
-from .sim import PEState, SimConfig, SimResult, WorkerState
+from .resources import Resources
+from .sim import PEState, SimConfig, SimResult, WorkerState, worker_fits_message
 from .workloads import Message, Stream
 
 __all__ = ["ReferenceSimCluster", "simulate_reference"]
@@ -42,7 +48,9 @@ class _RefProbe:
 
     def sample(self, pe_usages) -> None:
         for image, usage in pe_usages:
-            self._acc.setdefault(image, []).append(float(usage))
+            self._acc.setdefault(image, []).append(
+                usage if isinstance(usage, np.ndarray) else float(usage)
+            )
 
     def report(self) -> Dict[str, float]:
         out = {
@@ -59,13 +67,13 @@ class _RefProfiler(MasterProfiler):
     average on every query (no memoization).  Values are identical; only
     the per-call cost differs."""
 
-    def estimate(self, image: str) -> float:
+    def estimate(self, image: str):
         dq = self._samples.get(image)
         if not dq:
-            est = self.config.default_size
+            est = self._default_estimate()
         else:
             est = sum(dq) / len(dq)
-        return min(self.config.max_size, max(self.config.min_size, est))
+        return clamp_estimate(est, self.config)
 
 
 class _RefPE:
@@ -104,10 +112,31 @@ class ReferenceSimCluster:
         self.completed: List[Message] = []
         self.requested_target = 0
         self._failed: set = set()
+        # ---- multi-resource mode (mirrors SimCluster) ---------------------
+        self._dims = tuple(config.resource_dims)
+        self._multi = len(self._dims) > 1
+        if self._multi:
+            if self._dims[0] != "cpu":
+                raise ValueError(
+                    f"resource_dims[0] must be 'cpu', got {self._dims}"
+                )
+            irm.profiler.set_resource_dims(self._dims)
+        self.last_dim_measure: Optional[np.ndarray] = None
 
     # ---- ClusterView protocol -------------------------------------------------
     def queue_length(self) -> float:
         return float(len(self.queue))
+
+    def backlog_resource_demand(self) -> Optional[Resources]:
+        """Aggregate estimated demand of the backlog head (vector mode)."""
+        if not self._multi:
+            return None
+        est = self.irm.profiler.estimate
+        total: Optional[Resources] = None
+        for msg in self.queue[:64]:
+            v = est(msg.image)
+            total = v if total is None else total + v
+        return total
 
     def queue_image_mix(self) -> Dict[str, float]:
         mix: Dict[str, float] = {}
@@ -116,11 +145,23 @@ class ReferenceSimCluster:
         n = max(1.0, float(len(self.queue)))
         return {k: v / n for k, v in mix.items()}
 
-    def worker_scheduled_loads(self) -> List[float]:
+    def worker_scheduled_loads(self) -> List:
         # Bins are pre-filled with the *current* profiled usage of the PEs
         # they host — the paper propagates updated moving averages to all
         # scheduling state, not placement-time snapshots (Section V-B.3).
         est = self.irm.profiler.estimate
+        if self._multi:
+            out = []
+            for w in self.workers:
+                if w.state == WorkerState.OFF:
+                    out.append(Resources(self._dims, np.zeros(len(self._dims))))
+                    continue
+                load = np.zeros(len(self._dims))
+                for pe in w.pes:
+                    if pe.state != PEState.STOPPED:
+                        load = load + est(pe.image).values
+                out.append(Resources(self._dims, load))
+            return out
         return [
             sum(est(pe.image) for pe in w.pes if pe.state != PEState.STOPPED)
             if w.state != WorkerState.OFF
@@ -205,9 +246,15 @@ class ReferenceSimCluster:
                         pe.state = PEState.IDLE
                         pe.idle_since = self.t
                 if pe.state == PEState.IDLE:
-                    # P2P pull: match backlog messages of this image (FIFO)
+                    # P2P pull: match backlog messages of this image (FIFO).
+                    # Vector mode: rigid non-CPU dimensions gate the pull
+                    # (head-blocking — a blocked first match is not skipped).
                     for i, m in enumerate(self.queue):
                         if m.image == pe.image:
+                            if self._multi and not worker_fits_message(
+                                w.pes, m, self._dims, self.t
+                            ):
+                                break
                             m.start_t = self.t
                             m.done_t = self.t + m.duration
                             pe.msg = self.queue.pop(i)
@@ -222,6 +269,8 @@ class ReferenceSimCluster:
 
     def measure(self) -> np.ndarray:
         """Instantaneous measured CPU per worker (fraction of the worker)."""
+        if self._multi:
+            return self._measure_multi()
         cfg = self.cfg
         out = np.zeros(max(len(self.workers), 1))
         for w in self.workers:
@@ -245,11 +294,61 @@ class ReferenceSimCluster:
             w.probe.sample(samples)
         return out
 
+    def _measure_multi(self) -> np.ndarray:
+        """Vector-mode measurement mirroring ``SimCluster._measure_multi``:
+        noisy CPU draws (same RNG order), exact auxiliary dimensions, the
+        per-PE fraction vectors sampled into the probe."""
+        cfg = self.cfg
+        dims = self._dims
+        D = len(dims)
+        cores_per_worker = float(cfg.cores_per_worker)
+        noise_std = cfg.cpu_noise_std * cfg.cores_per_worker
+        idle_draw = min(max(cfg.idle_pe_cpu_cores, 0.0), cores_per_worker)
+        n = max(len(self.workers), 1)
+        out = np.zeros(n)
+        dim_out = np.zeros((n, D))
+        for w in self.workers:
+            if w.state != WorkerState.ACTIVE:
+                continue
+            totals = np.zeros(D)
+            samples = []
+            for pe in w.pes:
+                vec = np.zeros(D)
+                if pe.state == PEState.BUSY and pe.msg is not None:
+                    draw = pe.msg.cpu_cores * float(
+                        self.rng.normal(1.0, noise_std)
+                    )
+                    if draw < 0.0:
+                        draw = 0.0
+                    elif draw > cores_per_worker:
+                        draw = cores_per_worker
+                    vec[0] = draw / cores_per_worker
+                    mres = pe.msg.resources
+                    if mres:
+                        for j in range(1, D):
+                            vec[j] = mres.get(dims[j], 0.0)
+                elif pe.state == PEState.IDLE:
+                    vec[0] = idle_draw / cores_per_worker
+                totals = totals + vec
+                samples.append((pe.image, vec))
+            clipped = np.minimum(totals, 1.0)
+            dim_out[w.idx] = clipped
+            out[w.idx] = clipped[0]
+            w.probe.sample(samples)
+        self.last_dim_measure = dim_out
+        return out
+
     def flush_probes(self) -> None:
+        dims = self._dims if self._multi else None
         for w in self.workers:
             if w.state == WorkerState.ACTIVE and w.pes:
                 report = w.probe.report()
                 if report:
+                    if dims is not None:
+                        report = {
+                            img: Resources(dims, vec)
+                            for img, vec in report.items()
+                        }
                     self.irm.ingest_report(report)
 
 
@@ -288,6 +387,11 @@ def simulate_reference(
     pe_count: List[int] = []
     last_report_t = -1e9
     makespan = 0.0
+    multi = cluster._multi
+    dims = cluster._dims
+    D = len(dims)
+    measured_res: List[np.ndarray] = []
+    scheduled_res: List[np.ndarray] = []
 
     t = 0.0
     while t <= cfg.t_max:
@@ -306,10 +410,25 @@ def simulate_reference(
 
         W = cfg.max_workers
         mw = np.zeros(W)
-        mw[: min(len(m), W)] = m[:W]
+        k = min(len(m), W)
+        mw[:k] = m[:W]
         sw = np.zeros(W)
         sl = cluster.worker_scheduled_loads()
-        sw[: min(len(sl), W)] = np.minimum(np.array(sl[:W]), 1.0)
+        import math as _math
+
+        if multi:
+            mr = np.zeros((W, D))
+            mr[:k] = cluster.last_dim_measure[:k]
+            sr = np.zeros((W, D))
+            for j in range(min(len(sl), W)):
+                v = sl[j].values
+                c = v[0]
+                sw[j] = c if c < 1.0 else 1.0
+                sr[j] = np.minimum(v, 1.0)
+            measured_res.append(mr)
+            scheduled_res.append(sr)
+        else:
+            sw[: min(len(sl), W)] = np.minimum(np.array(sl[:W]), 1.0)
 
         times.append(t)
         measured.append(mw)
@@ -319,18 +438,34 @@ def simulate_reference(
             sum(1 for w in cluster.workers if w.state == WorkerState.ACTIVE)
         )
         target.append(cluster.requested_target)
-        # ideal bins for the *current* in-system load (backlog + busy PEs)
-        busy_load = sum(
-            pe.estimate
-            for w in cluster.workers
-            for pe in w.pes
-            if w.state == WorkerState.ACTIVE
-        )
         est = irm.profiler
-        backlog_load = sum(est.estimate(msg.image) for msg in cluster.queue[:64])
-        import math as _math
-
-        ideal.append(int(_math.ceil(busy_load + min(backlog_load, 64.0))))
+        if multi:
+            # ideal bins: dominant-dimension bound on the in-system load
+            busy_vec = np.zeros(D)
+            for w in cluster.workers:
+                if w.state == WorkerState.ACTIVE:
+                    for pe in w.pes:
+                        busy_vec = busy_vec + pe.estimate.values
+            backlog_vec = np.zeros(D)
+            for msg in cluster.queue[:64]:
+                backlog_vec = backlog_vec + est.estimate(msg.image).values
+            ideal.append(int(max(
+                _math.ceil(busy_vec[j] + (backlog_vec[j]
+                                          if backlog_vec[j] < 64.0 else 64.0))
+                for j in range(D)
+            )))
+        else:
+            # ideal bins for the *current* in-system load (backlog + busy PEs)
+            busy_load = sum(
+                pe.estimate
+                for w in cluster.workers
+                for pe in w.pes
+                if w.state == WorkerState.ACTIVE
+            )
+            backlog_load = sum(
+                est.estimate(msg.image) for msg in cluster.queue[:64]
+            )
+            ideal.append(int(_math.ceil(busy_load + min(backlog_load, 64.0))))
         pe_count.append(sum(len(w.pes) for w in cluster.workers))
 
         if cluster.completed:
@@ -353,4 +488,7 @@ def simulate_reference(
         total=total,
         makespan=makespan,
         messages=[m for _, b in stream.batches for m in b],
+        resource_dims=dims,
+        measured_res=np.stack(measured_res) if multi else None,
+        scheduled_res=np.stack(scheduled_res) if multi else None,
     )

@@ -17,7 +17,7 @@ so packed training is loss-equivalent to unpacked training.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 

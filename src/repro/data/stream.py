@@ -20,7 +20,7 @@ from __future__ import annotations
 import queue
 import threading
 from collections import deque
-from typing import Callable, Dict, Iterable, Iterator, Optional
+from typing import Dict, Iterable, Iterator, Optional
 
 import numpy as np
 
@@ -146,7 +146,6 @@ class StreamingPipeline:
 
     # ---- metrics ---------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        cap = max(1, self.packer.rows_out * self.seq_len)
         return {
             "docs_in": self.packer.docs_in,
             "tokens_in": self.packer.tokens_in,

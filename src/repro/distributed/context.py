@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 

@@ -11,7 +11,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ...serving.kv_cache import PageAllocator
 from .kernel import paged_decode_attention

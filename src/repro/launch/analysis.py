@@ -10,7 +10,7 @@ term.  Shapes are parsed from the HLO type syntax (``bf16[16,1024]{...}``).
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 __all__ = [
     "collective_bytes",

@@ -20,11 +20,10 @@ Usage:
 """
 
 import argparse
-import functools
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -108,9 +107,6 @@ def lower_cell(
             lowered = jitted.lower(params, opt_state, batch)
     elif shape.kind == "prefill":
         params = abstract_params(specs, dtype=jnp.bfloat16)
-        pb_shard = jax.tree.map(
-            lambda s: s.update(memory_kind=s.memory_kind) if False else s, p_shard
-        )
         jitted = jax.jit(
             lambda p, b: model.prefill(p, b),
             in_shardings=(p_shard, b_shard),

@@ -217,7 +217,6 @@ def _replica_groups_cross_pod(attrs: str, pod_size: int) -> bool:
         # group size = dims[-1]? iota grouping: first dim = num groups
         if len(dims) >= 2:
             group_sz = dims[-1]
-            stride = total // max(1, _numel(dims)) * 1
             # conservative: a group that is not contiguous within a pod
             return group_sz > pod_size or total > pod_size and dims[0] < (
                 total // pod_size

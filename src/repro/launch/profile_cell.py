@@ -36,9 +36,6 @@ def main() -> None:
     args = ap.parse_args()
 
     import json
-    import time
-
-    from ..configs import SHAPES_BY_NAME, get_config
     # lower_cell recompiles; reuse its record and re-lower for the text
     rec = lower_cell(
         args.arch, args.shape, multi_pod=args.multi_pod,
@@ -62,7 +59,7 @@ def main() -> None:
 
     hlo = rec["_hlo_text"]
     print(f"\ntop {args.top} collective contributors "
-          f"(bytes x loop multipliers, per device):")
+          "(bytes x loop multipliers, per device):")
     pod = 256 if args.multi_pod else 10 ** 9
     for name, kind, wire, mult in top_collectives(hlo, n=args.top,
                                                   pod_size=pod):

@@ -26,12 +26,11 @@ from .layers import (
     mlp_specs,
     norm,
     norm_specs,
-    rope,
     _project_qkv,
 )
 from ..distributed.context import constrain
 from .params import Spec
-from .transformer import _remat, _stack_period, chunked_cross_entropy, pad_vocab
+from .transformer import _remat, chunked_cross_entropy, pad_vocab
 
 __all__ = ["EncDecLM"]
 

@@ -18,7 +18,6 @@ Three entry points, matching the assigned input shapes:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

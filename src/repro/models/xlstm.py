@@ -236,7 +236,6 @@ def slstm_forward(
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B, S, d = x.shape
     H = cfg.n_heads
-    dh = d // H
     if state is None:
         state = slstm_init_state(cfg, B)
     gx = jnp.einsum("bsd,dghk->bsghk", x, p["wx"])  # (B, S, 4, H, dh)

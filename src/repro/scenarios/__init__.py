@@ -24,6 +24,8 @@ from .streams import (
     bursty_workload,
     diurnal_workload,
     heavy_tailed_workload,
+    microscopy_mem_workload,
+    mixed_accel_workload,
     multi_tenant_workload,
     synthetic_workload,
     usecase_workload,
@@ -41,7 +43,9 @@ _LAZY = {
     "run_scenario": "engine",
     "sweep_policies": "engine",
     "summarize_result": "engine",
+    "policies_for": "engine",
     "POLICIES": "engine",
+    "VECTOR_POLICIES": "engine",
     "run_serving_scenario": "serving",
     "stream_to_requests": "serving",
     "default_engine_config": "serving",
@@ -55,6 +59,8 @@ __all__ = [
     "bursty_workload",
     "diurnal_workload",
     "heavy_tailed_workload",
+    "microscopy_mem_workload",
+    "mixed_accel_workload",
     "multi_tenant_workload",
     *_LAZY,
 ]

@@ -22,7 +22,8 @@ from ..core.sim import SimResult, simulate
 from .registry import Scenario, get_scenario
 
 __all__ = ["ScenarioResult", "run_scenario", "sweep_policies",
-           "summarize_result", "POLICIES", "ACTIVE_THRESHOLD"]
+           "summarize_result", "policies_for", "POLICIES", "VECTOR_POLICIES",
+           "ACTIVE_THRESHOLD"]
 
 # Packing policies the CLI sweeps; every name resolves via make_packer and
 # supports the IRM's pre-filled open bins.  ``harmonic`` is deliberately
@@ -30,6 +31,20 @@ __all__ = ["ScenarioResult", "run_scenario", "sweep_policies",
 # test_packing_rejects_non_anyfit) and exists for the algorithm-comparison
 # microbenchmarks only.
 POLICIES = ("first-fit", "first-fit-tree", "best-fit", "worst-fit", "next-fit")
+
+# Vector policies for multi-resource scenarios (``SimConfig.resource_dims``
+# beyond "cpu").  All support pre-filled vector bins; ``vector-ffd``
+# reorders each packing run's drained batch largest-dominant-share first.
+VECTOR_POLICIES = ("vector-first-fit", "vector-best-fit", "vector-next-fit",
+                   "dominant-fit", "vector-ffd")
+
+
+def policies_for(scenario: Union[str, "Scenario"]) -> Sequence[str]:
+    """The policy family a scenario sweeps: vector policies when its
+    cluster has more than one resource dimension, else the Any-Fit group."""
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    dims = getattr(scn.sim_config(), "resource_dims", ("cpu",))
+    return VECTOR_POLICIES if len(dims) > 1 else POLICIES
 
 # Activity threshold shared with the seed benchmarks and the library's
 # expectation checks (a worker counts as scheduled when its packed load
@@ -67,7 +82,7 @@ def summarize_result(res: SimResult, dt: float) -> Dict[str, float]:
     w = len(per_worker_load)
     low = float(per_worker_load[: w // 2 + 1].sum())
     high = float(per_worker_load[w // 2 + 1:].sum())
-    return {
+    out = {
         "completed": int(res.completed),
         "total": int(res.total),
         "makespan_s": float(res.makespan),
@@ -87,6 +102,16 @@ def summarize_result(res: SimResult, dt: float) -> Dict[str, float]:
         "peak_queue_len": int(res.queue_len.max()),
         "peak_pe_count": int(res.pe_count.max()),
     }
+    if res.scheduled_res is not None:
+        # per-dimension mean scheduled utilization over active cells
+        for j, dim in enumerate(res.resource_dims):
+            vals = res.scheduled_res[:, :, j][active]
+            out[f"mean_scheduled_{dim}_active"] = (
+                float(vals.mean()) if vals.size else 0.0
+            )
+        dom = res.scheduled_res.sum(axis=(0, 1)).argmax()
+        out["bottleneck_dim"] = res.resource_dims[int(dom)]
+    return out
 
 
 def run_scenario(

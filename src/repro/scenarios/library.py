@@ -18,12 +18,14 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.irm import IRMConfig
 from ..core.sim import SimConfig, SimResult
 from .engine import ACTIVE_THRESHOLD
 from .registry import Expectation, register_scenario
 from . import streams
 
-__all__ = ["PAPER_SIM", "PAPER_SIM_USECASE"]
+__all__ = ["PAPER_SIM", "PAPER_SIM_USECASE", "MEM_SIM", "ACCEL_SIM",
+           "VECTOR_IRM"]
 
 
 def PAPER_SIM() -> SimConfig:
@@ -40,6 +42,27 @@ def PAPER_SIM_USECASE() -> SimConfig:
     """Same testbed with the use case's longer horizon (767 images)."""
     cfg = PAPER_SIM()
     cfg.t_max = 3600.0
+    return cfg
+
+
+def MEM_SIM() -> SimConfig:
+    """The SNIC testbed with a rigid memory dimension per worker."""
+    cfg = PAPER_SIM_USECASE()
+    cfg.resource_dims = ("cpu", "mem")
+    return cfg
+
+
+def ACCEL_SIM() -> SimConfig:
+    """The testbed with one accelerator per worker as a rigid dimension."""
+    cfg = PAPER_SIM()
+    cfg.resource_dims = ("cpu", "accel")
+    return cfg
+
+
+def VECTOR_IRM() -> IRMConfig:
+    """IRM configured for vector bin-packing (paper Sec. VII direction)."""
+    cfg = IRMConfig()
+    cfg.allocator.algorithm = "vector-first-fit"
     return cfg
 
 
@@ -252,6 +275,104 @@ register_scenario(
     },
     smoke_t_max=700.0,
 )(streams.heavy_tailed_workload)
+
+
+# ---------------------------------------------------------------------------
+# Multi-resource scenarios (vector bin-packing — paper Sec. VII future work)
+# ---------------------------------------------------------------------------
+
+
+def _dims_capacity_respected(res: SimResult) -> bool:
+    """No dimension of any worker is ever scheduled above capacity."""
+    if res.scheduled_res is None:
+        return False  # a multi-resource scenario must record per-dim loads
+    return bool((res.scheduled_res <= 1.0 + 1e-9).all())
+
+
+def _memory_is_bottleneck(res: SimResult) -> bool:
+    """Memory saturates workers while their CPU stays far from full."""
+    if res.scheduled_res is None:
+        return False
+    d = res.resource_dims.index("mem")
+    mem = res.scheduled_res[:, :, d]
+    cpu = res.scheduled_res[:, :, 0]
+    hot = mem > 0.5
+    if not hot.any():
+        return False
+    # wherever memory is half-committed, CPU is never the tighter dimension
+    # (<=: the cold-start default estimate is equal in every dimension), and
+    # memory carries well over the CPU's total scheduled load
+    return bool(
+        (cpu[hot] <= mem[hot] + 1e-9).all() and mem.sum() > 1.5 * cpu.sum()
+    )
+
+
+def _accel_and_cpu_colocated(res: SimResult) -> bool:
+    """Vector packing co-locates accelerator and CPU tenants on one worker."""
+    if res.scheduled_res is None:
+        return False
+    d = res.resource_dims.index("accel")
+    accel = res.scheduled_res[:, :, d]
+    cpu = res.scheduled_res[:, :, 0]
+    return bool(((accel > 0.2) & (cpu > 0.3)).any())
+
+
+register_scenario(
+    "microscopy-mem",
+    "Memory-bound microscopy: each analysis pins 1 core but holds 25-45% "
+    "of worker RAM — memory, not CPU, dictates the packing.",
+    sim_config=MEM_SIM,
+    irm_config=VECTOR_IRM,
+    n_runs=3,
+    tags=("extended", "vector", "usecase"),
+    expectations=(
+        COMPLETES,
+        CAPACITY,
+        Expectation(
+            "dims_capacity_respected",
+            "no worker dimension is scheduled above capacity",
+            _dims_capacity_respected,
+        ),
+        Expectation(
+            "memory_is_bottleneck",
+            "memory saturates workers while CPU stays slack",
+            _memory_is_bottleneck,
+        ),
+    ),
+    smoke_overrides={"n_images": 30, "duration_range": (4.0, 8.0)},
+    smoke_t_max=600.0,
+)(streams.microscopy_mem_workload)
+
+
+register_scenario(
+    "mixed-accel",
+    "Mixed CPU/accelerator tenants: multi-core ETL jobs interleave with "
+    "accelerator-hungry inference — complementary vector items.",
+    sim_config=ACCEL_SIM,
+    irm_config=VECTOR_IRM,
+    tags=("extended", "vector", "multi-tenant"),
+    expectations=(
+        COMPLETES,
+        CAPACITY,
+        Expectation(
+            "dims_capacity_respected",
+            "no worker dimension is scheduled above capacity",
+            _dims_capacity_respected,
+        ),
+        Expectation(
+            "accel_and_cpu_colocated",
+            "accelerator and CPU tenants share a worker at least once",
+            _accel_and_cpu_colocated,
+        ),
+        Expectation(
+            "multiple_images_served",
+            "at least three tenant images are processed",
+            _multiple_images_served,
+        ),
+    ),
+    smoke_overrides={"t_end": 80.0, "batch_size": (2, 5)},
+    smoke_t_max=700.0,
+)(streams.mixed_accel_workload)
 
 
 register_scenario(

@@ -32,7 +32,14 @@ import os
 import sys
 from typing import Dict, List, Optional
 
-from .engine import POLICIES, ScenarioResult, run_scenario, sweep_policies
+from .engine import (
+    POLICIES,
+    VECTOR_POLICIES,
+    ScenarioResult,
+    policies_for,
+    run_scenario,
+    sweep_policies,
+)
 from .registry import get_scenario, list_scenarios
 
 
@@ -110,8 +117,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="with --list: also print expectations")
     ap.add_argument(
         "--policy", default=None,
-        help="packing policy, comma-separated for a sweep, or 'all' "
-        f"({', '.join(POLICIES)}); default: the scenario's configured policy",
+        help="packing policy, comma-separated for a sweep, or 'all' — the "
+        f"scenario's policy family: scalar ({', '.join(POLICIES)}) or, for "
+        f"multi-resource scenarios, vector ({', '.join(VECTOR_POLICIES)}); "
+        "default: the scenario's configured policy",
     )
     ap.add_argument("--backend", choices=("sim", "serving"), default="sim",
                     help="cluster sim (paper testbed) or serving engine")
@@ -189,7 +198,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.policy in (None, ""):
         policies = [None]
     elif args.policy == "all":
-        policies = list(POLICIES)
+        # the scenario's policy family: vector packers for multi-resource
+        # clusters, the scalar Any-Fit group otherwise
+        policies = list(policies_for(scn))
     else:
         policies = [p.strip() for p in args.policy.split(",") if p.strip()]
 

@@ -49,6 +49,8 @@ def stream_to_requests(
     min_prompt: int = 32,
     min_new_tokens: int = 16,
     time_scale: float = 1.0,
+    mem_prompt_weight: float = 2.0,
+    accel_decode_weight: float = 2.0,
 ) -> List[Tuple[float, Request]]:
     """Convert a workload stream into a time-ordered request schedule.
 
@@ -57,18 +59,27 @@ def stream_to_requests(
     heterogeneity survives the translation.  ``time_scale`` compresses the
     arrival axis (the serving engine processes a "10 s" request in well
     under a second of engine time).
+
+    Multi-resource messages map onto the replica's own vector dimensions:
+    memory demand scales the *prompt* (KV pages are the serving engine's
+    memory dimension), accelerator demand scales the *decode* length
+    (slot-seconds are its accelerator-time dimension).  A message with no
+    ``resources`` maps exactly as before.
     """
     schedule: List[Tuple[float, Request]] = []
     for t, msgs in sorted(stream.batches, key=lambda b: b[0]):
         for m in msgs:
+            prompt_s = m.duration * prompt_tokens_per_s
+            decode_s = m.duration * decode_tokens_per_s
+            if m.resources:
+                prompt_s *= 1.0 + mem_prompt_weight * m.resources.get("mem", 0.0)
+                decode_s *= 1.0 + accel_decode_weight * m.resources.get("accel", 0.0)
             schedule.append(
                 (
                     t * time_scale,
                     Request(
-                        prompt_len=max(min_prompt, int(m.duration * prompt_tokens_per_s)),
-                        max_new_tokens=max(
-                            min_new_tokens, int(m.duration * decode_tokens_per_s)
-                        ),
+                        prompt_len=max(min_prompt, int(prompt_s)),
+                        max_new_tokens=max(min_new_tokens, int(decode_s)),
                         req_class=m.image,
                     ),
                 )

@@ -33,6 +33,8 @@ __all__ = [
     "diurnal_workload",
     "heavy_tailed_workload",
     "multi_tenant_workload",
+    "microscopy_mem_workload",
+    "mixed_accel_workload",
 ]
 
 _msg_ids = itertools.count()
@@ -43,13 +45,17 @@ class Message:
     """One stream message: data to process + the container image to run.
 
     ``cpu_cores`` is the CPU draw while processing, in cores; ``duration`` is
-    the processing time in seconds.
+    the processing time in seconds.  ``resources`` optionally carries the
+    draw on *auxiliary* worker dimensions while busy (e.g. ``{"mem": 0.3}``
+    = 30% of a worker's memory), as fractions of one worker; CPU stays in
+    ``cpu_cores``.  ``None`` is the paper's scalar CPU-only model.
     """
 
     image: str
     duration: float
     cpu_cores: float = 1.0
     arrival: float = 0.0
+    resources: Optional[Dict[str, float]] = None
     msg_id: int = dataclasses.field(default_factory=lambda: next(_msg_ids))
     # bookkeeping filled in by the sim
     start_t: float = -1.0
@@ -287,6 +293,89 @@ def heavy_tailed_workload(
                 ],
             )
         )
+    return Stream(batches=batches)
+
+
+def microscopy_mem_workload(
+    seed: int = 0,
+    *,
+    n_images: int = 300,
+    duration_range: Tuple[float, float] = (10.0, 20.0),
+    mem_range: Tuple[float, float] = (0.25, 0.45),
+    image: str = "haste/cellprofiler-bigimg:3.1.9",
+) -> Stream:
+    """Memory-bound microscopy: the use case with large image working sets.
+
+    Each analysis pins one core (a small CPU fraction on an 8-core worker)
+    but holds a working set of 25-45% of a worker's memory while busy, so
+    *memory* is the dominant dimension: a worker fits ~2-3 concurrent
+    analyses by RAM long before its CPU fills.  A CPU-only packer would
+    schedule 8 PEs per worker and overcommit memory ~3x; the vector packer
+    opens workers on the memory dimension instead.
+    """
+    rng = np.random.default_rng(seed)
+    durations = rng.uniform(duration_range[0], duration_range[1], size=n_images)
+    mems = rng.uniform(mem_range[0], mem_range[1], size=n_images)
+    rng.shuffle(durations)  # randomized streaming order (as the use case)
+    msgs = [
+        Message(
+            image=image,
+            duration=float(d),
+            cpu_cores=1.0,
+            arrival=0.0,
+            resources={"mem": float(mem)},
+        )
+        for d, mem in zip(durations, mems)
+    ]
+    return Stream(batches=[(0.0, msgs)])
+
+
+def mixed_accel_workload(
+    seed: int = 0,
+    *,
+    t_end: float = 360.0,
+    batch_interval: float = 10.0,
+    batch_size: Tuple[int, int] = (3, 8),
+    tenants: Sequence[Tuple[str, float, float, float]] = (
+        # (image, mean duration s, cpu cores busy, accel fraction busy)
+        ("tenant-cpu/etl", 8.0, 4.0, 0.0),
+        ("tenant-cpu/report", 5.0, 2.0, 0.0),
+        ("tenant-accel/vision", 12.0, 0.8, 0.5),
+        ("tenant-accel/asr", 6.0, 0.5, 0.25),
+    ),
+    tenant_weights: Tuple[float, ...] = (0.35, 0.25, 0.25, 0.15),
+) -> Stream:
+    """Mixed CPU / accelerator tenants sharing one worker pool.
+
+    CPU tenants draw several cores and no accelerator; accelerator tenants
+    draw a large accelerator fraction but little CPU.  The two are
+    *complementary*: a vector packer can co-locate one vision job (accel
+    0.5, cpu 0.1) with ETL jobs (cpu 0.5, accel 0) on the same worker,
+    which no single-dimension formulation can even express.
+    """
+    rng = np.random.default_rng(seed)
+    weights = np.asarray(tenant_weights, dtype=float)
+    weights = weights / weights.sum()
+    batches: List[Tuple[float, List[Message]]] = []
+    t = 0.0
+    while t < t_end:
+        n = int(rng.integers(batch_size[0], batch_size[1] + 1))
+        picks = rng.choice(len(tenants), size=n, p=weights)
+        msgs = []
+        for p in picks:
+            image, mean_dur, cores, accel = tenants[int(p)]
+            dur = float(rng.uniform(0.7, 1.3)) * mean_dur
+            msgs.append(
+                Message(
+                    image=image,
+                    duration=dur,
+                    cpu_cores=cores,
+                    arrival=t,
+                    resources={"accel": accel} if accel > 0 else None,
+                )
+            )
+        batches.append((t, msgs))
+        t += batch_interval
     return Stream(batches=batches)
 
 

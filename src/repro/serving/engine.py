@@ -25,14 +25,13 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.binpack import VectorFirstFit, VectorItem
 from ..core.load_predictor import LoadPredictor, LoadPredictorConfig
 from ..core.profiler import MasterProfiler, ProfilerConfig
-from ..core.queues import ContainerQueue, HostRequest
+from ..core.queues import ContainerQueue
 from .kv_cache import PageAllocator, PagedCacheLayout
 
 __all__ = [

@@ -14,7 +14,6 @@ paper-faithful baseline; see EXPERIMENTS.md §Perf for their effect):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,6 @@ and fault tolerance under worker failure.
 """
 
 import numpy as np
-import pytest
 
 from repro.core import (
     IRM,

@@ -1,0 +1,216 @@
+"""Unit tests for the ``Resources`` value type and its control-plane hooks:
+per-dimension profiler estimates and the load predictor's bottleneck-
+dimension pressure scaling."""
+
+import pytest
+
+from repro.core import Resources, as_resources
+from repro.core.load_predictor import LoadPredictor, LoadPredictorConfig
+from repro.core.profiler import MasterProfiler, ProfilerConfig, clamp_estimate
+
+
+# ---------------------------------------------------------------------------
+# Resources value type
+# ---------------------------------------------------------------------------
+
+
+def test_construction_and_views():
+    r = Resources.of(cpu=0.3, mem=0.5)
+    assert r.dims == ("cpu", "mem")
+    assert r.get("cpu") == 0.3
+    assert r.get("mem") == 0.5
+    assert r.get("accel") == 0.0  # missing -> default
+    assert r.as_tuple() == (0.3, 0.5)
+    assert r.as_dict() == {"cpu": 0.3, "mem": 0.5}
+    assert not r.is_scalar
+    assert Resources.cpu(0.7).is_scalar
+    assert Resources.cpu(0.7).to_float() == 0.7
+    with pytest.raises(ValueError):
+        r.to_float()  # multi-dim cannot collapse
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        Resources((), [])
+    with pytest.raises(ValueError):
+        Resources(("cpu", "mem"), [0.5])  # shape mismatch
+
+
+def test_align_reorders_and_zero_fills():
+    r = Resources.of(cpu=0.2, accel=0.8)
+    a = r.align(("cpu", "mem", "accel"))
+    assert a.dims == ("cpu", "mem", "accel")
+    assert a.as_tuple() == (0.2, 0.0, 0.8)
+    # aligning to own dims is the identity
+    assert r.align(r.dims) is r
+
+
+def test_scalar_coercion():
+    v = as_resources(0.4, ("cpu", "mem"))
+    assert v.as_tuple() == (0.4, 0.0)  # float == CPU-only demand
+    w = as_resources(Resources.of(mem=0.3), ("cpu", "mem"))
+    assert w.as_tuple() == (0.0, 0.3)
+
+
+def test_arithmetic_value_semantics():
+    a = Resources.of(cpu=0.2, mem=0.4)
+    b = Resources.of(cpu=0.1, mem=0.1)
+    s = a + b
+    assert s.as_tuple() == pytest.approx((0.3, 0.5))
+    assert a.as_tuple() == (0.2, 0.4)  # untouched
+    assert (a - b).as_tuple() == pytest.approx((0.1, 0.3))
+    assert (a * 2.0).as_tuple() == pytest.approx((0.4, 0.8))
+    assert (a / 2.0).as_tuple() == pytest.approx((0.1, 0.2))
+    # sum() support (starts at int 0)
+    assert sum([a, b]).as_tuple() == pytest.approx((0.3, 0.5))
+
+
+def test_dominant_dimension():
+    r = Resources.of(cpu=0.2, mem=0.6, accel=0.1)
+    assert r.dominant() == ("mem", 0.6)
+    # utilization against a non-uniform capacity flips the dominant dim
+    cap = Resources.of(cpu=0.25, mem=1.0, accel=1.0)
+    dim, frac = r.dominant(cap)
+    assert dim == "cpu" and frac == pytest.approx(0.8)
+
+
+def test_clamp_floors_cpu_only():
+    r = Resources.of(cpu=0.0, mem=-0.2, accel=1.7)
+    c = r.clamp(1e-3, 1.0)
+    assert c.as_tuple() == (1e-3, 0.0, 1.0)
+
+
+def test_equality():
+    assert Resources.of(cpu=0.5) == Resources.cpu(0.5)
+    assert Resources.of(cpu=0.5) != Resources.of(mem=0.5)
+    assert Resources.of(cpu=0.5) != 0.5
+
+
+# ---------------------------------------------------------------------------
+# Profiler: per-dimension observed usage and estimates
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_vector_moving_average():
+    p = MasterProfiler(ProfilerConfig(window=4))
+    p.set_resource_dims(("cpu", "mem"))
+    for c, m in ((0.1, 0.4), (0.2, 0.6), (0.3, 0.2)):
+        p.observe("img", Resources(("cpu", "mem"), (c, m)))
+    est = p.estimate("img")
+    assert isinstance(est, Resources)
+    assert est.get("cpu") == pytest.approx(0.2)
+    assert est.get("mem") == pytest.approx(0.4)
+
+
+def test_profiler_vector_default_for_unseen_image():
+    p = MasterProfiler(ProfilerConfig(default_size=0.42))
+    p.set_resource_dims(("cpu", "mem", "accel"))
+    est = p.estimate("never-seen")
+    assert isinstance(est, Resources)
+    assert est.as_tuple() == (0.42, 0.42, 0.42)
+
+
+def test_profiler_scalar_path_unchanged_by_vector_support():
+    """1-D Resources observations produce the exact scalar estimates."""
+    ps = MasterProfiler(ProfilerConfig(window=8))
+    pv = MasterProfiler(ProfilerConfig(window=8))
+    pv.set_resource_dims(("cpu",))
+    vals = [0.11, 0.52, 0.97, 0.33, 0.08]
+    for v in vals:
+        ps.observe("img", v)
+        pv.observe("img", Resources.cpu(v))
+    assert pv.estimate("img").to_float() == ps.estimate("img")
+
+
+def test_profiler_scalar_samples_survive_switch_to_vector_dims():
+    """Regression: a persistent profiler carried from a scalar run onto a
+    multi-resource cluster must convert its stale float samples, not crash
+    (or return floats) in vector mode."""
+    p = MasterProfiler(ProfilerConfig(window=4))
+    p.observe("img", 0.2)
+    p.observe("img", 0.4)
+    p.set_resource_dims(("cpu", "mem"))
+    est = p.estimate("img")
+    assert isinstance(est, Resources)
+    assert est.get("cpu") == pytest.approx(0.3)  # learned CPU profile kept
+    assert est.get("mem") == 0.0                 # no memory evidence yet
+    # new vector observations mix into the same window without TypeError
+    p.observe("img", Resources.of(cpu=0.2, mem=0.6))
+    est = p.estimate("img")
+    assert est.get("mem") == pytest.approx(0.2)  # (0 + 0 + 0.6) / 3
+
+
+def test_clamp_estimate_vector_vs_scalar():
+    cfg = ProfilerConfig(min_size=0.01, max_size=1.0)
+    assert clamp_estimate(3.0, cfg) == 1.0
+    v = clamp_estimate(Resources.of(cpu=3.0, mem=0.0), cfg)
+    assert v.as_tuple() == (1.0, 0.0)  # mem may be zero; cpu clamps
+
+
+# ---------------------------------------------------------------------------
+# Load predictor: bottleneck-dimension pressure
+# ---------------------------------------------------------------------------
+
+CFG = LoadPredictorConfig(
+    queue_low=8, queue_high=64, roc_low=1.0, roc_high=8.0,
+    small_increase=2, large_increase=8, read_interval=1.0, cooldown=5.0,
+)
+
+
+def test_effective_pressure_scalar_is_identity():
+    q, dim = LoadPredictor.effective_pressure(13.0, None)
+    assert q == 13.0 and dim == "cpu"
+    q, dim = LoadPredictor.effective_pressure(13.0, Resources.cpu(5.0))
+    assert q == 13.0  # 1-D demand: no scaling
+
+
+def test_effective_pressure_scales_on_bottleneck():
+    # 10 messages, each ~0.1 CPU but ~0.4 mem: mem pressure is 4x
+    demand = Resources.of(cpu=1.0, mem=4.0)
+    q, dim = LoadPredictor.effective_pressure(10.0, demand)
+    assert dim == "mem"
+    assert q == pytest.approx(40.0)
+    # CPU-dominant demand never scales up
+    q, dim = LoadPredictor.effective_pressure(10.0, Resources.of(cpu=4.0, mem=1.0))
+    assert q == 10.0 and dim == "cpu"
+
+
+def test_update_with_demand_triggers_earlier():
+    """A mem-bound backlog of 6 messages (< queue_low) still scales up."""
+    lp = LoadPredictor(CFG)
+    demand = Resources.of(cpu=0.6, mem=2.4)  # mem = 4x cpu
+    d = lp.update(0.0, 6.0, demand=demand)
+    # effective pressure 24 >= queue_low -> case 4 (first read, roc 0)
+    assert d.case == 4 and d.num_pes == 2
+    assert d.bottleneck == "mem"
+    assert d.pressure == pytest.approx(24.0)
+    assert d.queue_len == 6.0  # raw length still reported
+
+
+def test_update_evaluates_demand_lazily():
+    """The backlog demand scan must not run on gated (cooldown /
+    read-interval) ticks — the IRM passes it as a callable."""
+    lp = LoadPredictor(CFG)
+    calls = []
+
+    def demand():
+        calls.append(1)
+        return Resources.of(cpu=0.6, mem=2.4)
+
+    d = lp.update(0.0, 100.0, demand=demand)  # first read: scales up
+    assert d.num_pes > 0 and len(calls) == 1
+    lp.update(1.0, 100.0, demand=demand)      # inside cooldown: gated
+    lp.update(2.0, 100.0, demand=demand)
+    assert len(calls) == 1                    # never evaluated while gated
+    lp.update(6.0, 100.0, demand=demand)      # cooldown over
+    assert len(calls) == 2
+
+
+def test_update_without_demand_is_bitwise_identical():
+    a, b = LoadPredictor(CFG), LoadPredictor(CFG)
+    for t, q in ((0.0, 0.0), (1.0, 5.0), (2.0, 9.0), (3.5, 40.0), (9.0, 2.0)):
+        da = a.update(t, q)
+        db = b.update(t, q, demand=None)
+        assert (da.num_pes, da.case, da.roc, da.queue_len) == (
+            db.num_pes, db.case, db.roc, db.queue_len
+        )

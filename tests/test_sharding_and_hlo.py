@@ -3,7 +3,6 @@ HLO cost analysis that feeds the roofline."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 

@@ -66,7 +66,7 @@ def test_loss_decreases_over_steps(tiny):
 
 def test_grad_clipping_caps_update(tiny):
     cfg, model, params = tiny
-    from repro.training.optimizer import adamw_update, global_norm
+    from repro.training.optimizer import adamw_update
 
     grads = jax.tree.map(lambda p: 100.0 * jnp.ones_like(p), params)
     opt = init_opt_state(params)

@@ -1,0 +1,255 @@
+"""Vector bin-packing: the packer family, the factory registry, and the
+allocator's multi-resource packing run (pre-filled vector bins, per-dimension
+headroom, dominant-dimension lower bound, idle-buffer interaction)."""
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Resources
+from repro.core.allocator import AllocatorConfig, BinPackingManager, idle_buffer
+from repro.core.binpack import (
+    DominantFit,
+    VectorBestFit,
+    VectorBin,
+    VectorFirstFit,
+    VectorFirstFitDecreasing,
+    VectorItem,
+    VectorNextFit,
+    is_vector_policy,
+    make_packer,
+    vector_equivalent,
+    vector_lower_bound,
+)
+from repro.core.queues import HostRequest
+
+
+# ---------------------------------------------------------------------------
+# Factory / registry (satellite: actionable unknown-policy errors)
+# ---------------------------------------------------------------------------
+
+
+def test_make_packer_unknown_lists_scalar_and_vector_names():
+    with pytest.raises(ValueError) as ei:
+        make_packer("second-fit")
+    msg = str(ei.value)
+    assert "unknown packing algorithm" in msg
+    assert "first-fit" in msg and "best-fit" in msg          # scalar family
+    assert "vector-first-fit" in msg and "dominant-fit" in msg  # vector family
+
+
+def test_make_packer_resolves_vector_names():
+    assert isinstance(make_packer("vector-first-fit"), VectorFirstFit)
+    assert isinstance(make_packer("vector-best-fit"), VectorBestFit)
+    assert isinstance(make_packer("vector-next-fit"), VectorNextFit)
+    assert isinstance(make_packer("dominant-fit"), DominantFit)
+    assert isinstance(make_packer("vector-ffd"), VectorFirstFitDecreasing)
+    # float capacity normalizes to a 1-vector
+    assert make_packer("vector-first-fit", capacity=1.0).capacity == (1.0,)
+
+
+def test_is_vector_policy_and_equivalents():
+    assert is_vector_policy("vector-best-fit")
+    assert not is_vector_policy("best-fit")
+    assert vector_equivalent("first-fit") == "vector-first-fit"
+    assert vector_equivalent("first-fit-tree") == "vector-first-fit"
+    assert vector_equivalent("best-fit") == "vector-best-fit"
+    assert vector_equivalent("worst-fit") == "dominant-fit"
+    assert vector_equivalent("vector-ffd") == "vector-ffd"  # already vector
+    with pytest.raises(ValueError, match="no vector equivalent"):
+        vector_equivalent("harmonic")
+
+
+# ---------------------------------------------------------------------------
+# Vector packers
+# ---------------------------------------------------------------------------
+
+
+def test_vector_bin_prefill():
+    b = VectorBin((1.0, 1.0), used=(0.9, 0.2))
+    assert b.free == (pytest.approx(0.1), pytest.approx(0.8))
+    assert not b.fits((0.2, 0.1))  # blocked by dim 0
+    assert b.fits((0.1, 0.5))
+    with pytest.raises(ValueError):
+        VectorBin((1.0, 1.0), used=(0.5,))  # dims mismatch
+
+
+def test_vector_first_fit_prefilled_bins():
+    bins = [VectorBin((1.0, 1.0), used=(0.2, 0.95)),
+            VectorBin((1.0, 1.0), used=(0.5, 0.1))]
+    vff = VectorFirstFit((1.0, 1.0), bins=bins)
+    # fits bin 0 by cpu but not by mem -> lands on bin 1
+    assert vff.pack_one(VectorItem((0.3, 0.3))) == 1
+    # fits neither -> opens bin 2
+    assert vff.pack_one(VectorItem((0.9, 0.0))) == 2
+
+
+def test_vector_best_fit_picks_tightest():
+    vbf = VectorBestFit((1.0, 1.0))
+    vbf.bins = [VectorBin((1.0, 1.0), used=(0.1, 0.1)),
+                VectorBin((1.0, 1.0), used=(0.6, 0.7))]
+    # both fit; bin 1 leaves the smaller residual
+    assert vbf.pack_one(VectorItem((0.2, 0.2))) == 1
+
+
+def test_dominant_fit_spreads_on_items_bottleneck():
+    df = DominantFit((1.0, 1.0))
+    df.bins = [VectorBin((1.0, 1.0), used=(0.1, 0.8)),
+               VectorBin((1.0, 1.0), used=(0.5, 0.2))]
+    # item is mem-dominant: picks the bin with most free *mem* (bin 1)
+    assert df.pack_one(VectorItem((0.1, 0.2))) == 1
+    # cpu-dominant item picks the bin with most free cpu (bin 0)
+    assert df.pack_one(VectorItem((0.3, 0.05))) == 0
+
+
+def test_vector_next_fit_only_last_bin():
+    vnf = VectorNextFit((1.0, 1.0))
+    assert vnf.pack_one(VectorItem((0.6, 0.1))) == 0
+    assert vnf.pack_one(VectorItem((0.6, 0.1))) == 1  # bin 0 not revisited
+    assert vnf.pack_one(VectorItem((0.1, 0.1))) == 1
+
+
+def test_vector_ffd_sorts_by_dominant_share():
+    items = [VectorItem((0.2, 0.2)), VectorItem((0.1, 0.9)),
+             VectorItem((0.6, 0.1)), VectorItem((0.3, 0.7))]
+    ffd = VectorFirstFitDecreasing((1.0, 1.0))
+    res = ffd.pack(items)
+    assert len(res.assignments) == 4
+    # every item placed within capacity
+    for b in ffd.bins:
+        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity))
+    # FFD packs no more bins than online first-fit on the same items
+    vff = VectorFirstFit((1.0, 1.0))
+    vff.pack(items)
+    assert len(ffd.bins) <= len(vff.bins)
+
+
+def test_oversized_vector_item_raises():
+    vff = VectorFirstFit((0.5, 1.0))
+    with pytest.raises(ValueError, match="exceed bin capacity"):
+        vff.pack_one(VectorItem((0.8, 0.1)))
+
+
+def test_vector_lower_bound_is_dominant_dimension():
+    sizes = [(0.5, 0.1), (0.5, 0.1), (0.5, 0.1)]  # cpu 1.5, mem 0.3
+    assert vector_lower_bound(sizes, (1.0, 1.0)) == 2
+    sizes = [(0.1, 0.9)] * 4  # mem total 3.6 dominates
+    assert vector_lower_bound(sizes, (1.0, 1.0)) == 4
+    assert vector_lower_bound([], (1.0, 1.0)) == 0
+
+
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(min_value=0.01, max_value=1.0),
+            st.floats(min_value=0.0, max_value=1.0),
+        ),
+        min_size=1,
+        max_size=80,
+    ),
+    st.sampled_from(["vector-first-fit", "vector-best-fit",
+                     "vector-next-fit", "dominant-fit", "vector-ffd"]),
+)
+@settings(max_examples=100, deadline=None)
+def test_vector_packers_never_overflow_and_beat_lower_bound(pairs, name):
+    packer = make_packer(name, capacity=(1.0, 1.0))
+    items = [VectorItem(p) for p in pairs]
+    res = packer.pack(items)
+    for b in packer.bins:
+        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity))
+    assert res.num_bins >= vector_lower_bound(pairs, (1.0, 1.0))
+    assert len(res.assignments) == len(items)
+
+
+# ---------------------------------------------------------------------------
+# Allocator: vector packing runs
+# ---------------------------------------------------------------------------
+
+
+def req(cpu, ttl=3, **aux):
+    return HostRequest("img", size_estimate=Resources.of(cpu=cpu, **aux),
+                       ttl=ttl)
+
+
+def test_vector_run_prefilled_worker_bins():
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=False))
+    loads = [Resources.of(cpu=0.2, mem=0.9), Resources.of(cpu=0.0, mem=0.0)]
+    reqs = [req(0.1, mem=0.3) for _ in range(3)]
+    run = mgr.run(0.0, reqs, worker_loads=loads)
+    # worker 0 has mem free 0.1 < 0.3 -> everything lands on worker 1
+    assert [r.target_worker for r in run.placements] == [1, 1, 1]
+    assert run.num_bins == 2
+    assert isinstance(run.scheduled_load[0], Resources)
+
+
+def test_vector_run_full_in_one_dimension_with_slack_in_another():
+    """Satellite: a worker exactly full in one dimension opens a new bin
+    even though another dimension has plenty of slack."""
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=False))
+    loads = [Resources.of(cpu=0.2, mem=1.0)]  # mem exactly full, cpu slack
+    run = mgr.run(0.0, [req(0.1, mem=0.1)], worker_loads=loads)
+    assert run.placements[0].target_worker == 1  # not worker 0
+    assert run.num_bins == 2
+    # CPU-only demand still fits the mem-full worker
+    run2 = mgr.run(1.0, [req(0.5, mem=0.0)], worker_loads=loads)
+    assert run2.placements[0].target_worker == 0
+
+
+def test_vector_headroom_applies_per_dimension():
+    mgr = BinPackingManager(
+        AllocatorConfig(keep_idle_buffer=False, headroom=0.1)
+    )
+    # worker at mem 0.85: item mem clamped to 0.9 but the *bin* keeps full
+    # capacity, so a 0.2-mem item (free 0.15) still fits; a 0.2-mem item on
+    # a 0.95-mem worker does not.
+    run = mgr.run(0.0, [req(0.1, mem=1.0)], worker_loads=[])
+    # oversize estimate clamped to capacity - headroom in every dimension
+    assert run.scheduled_load[0].get("mem") == pytest.approx(0.9)
+    run2 = mgr.run(1.0, [req(0.1, mem=0.2)],
+                   worker_loads=[Resources.of(cpu=0.1, mem=0.95)])
+    assert run2.placements[0].target_worker == 1
+
+
+def test_vector_run_idle_buffer_added_on_top():
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=True))
+    run = mgr.run(0.0, [req(0.3, mem=0.8), req(0.3, mem=0.8)],
+                  worker_loads=[])
+    # two mem-heavy items cannot share a bin
+    assert run.num_bins == 2
+    assert run.target_workers == 2 + idle_buffer(2)
+
+
+def test_vector_run_dominant_dimension_ideal_bins():
+    mgr = BinPackingManager(AllocatorConfig(keep_idle_buffer=False))
+    reqs = [req(0.1, mem=0.6) for _ in range(4)]  # mem 2.4 vs cpu 0.4
+    run = mgr.run(0.0, reqs, worker_loads=[])
+    assert run.ideal_bins == 3  # ceil(2.4)
+    assert run.num_bins == 4    # 0.6-mem items don't pair up
+
+
+def test_vector_run_triggered_by_policy_name_on_scalar_loads():
+    """A vector policy with plain float loads/sizes still works (1-D)."""
+    mgr = BinPackingManager(
+        AllocatorConfig(algorithm="vector-first-fit", keep_idle_buffer=False)
+    )
+    reqs = [HostRequest("a", size_estimate=0.5) for _ in range(3)]
+    run = mgr.run(0.0, reqs, worker_loads=[0.8, 0.0])
+    # identical placement to the scalar first-fit run in test_irm_components
+    assert [r.target_worker for r in run.placements] == [1, 1, 2]
+
+
+def test_scenario_scalar_vs_vector_policy_parity():
+    """1-D Resources end-to-end: a vector policy on a scalar scenario
+    reproduces the scalar First-Fit time series bit-for-bit."""
+    import numpy as np
+
+    from repro.scenarios import get_scenario, run_scenario
+
+    scn = get_scenario("multi-tenant")
+    kwargs = dict(n_runs=1, stream_overrides=scn.smoke_overrides,
+                  t_max=scn.smoke_t_max)
+    a = run_scenario(scn, policy="first-fit", **kwargs).final
+    b = run_scenario(scn, policy="vector-first-fit", **kwargs).final
+    np.testing.assert_array_equal(a.scheduled_cpu, b.scheduled_cpu)
+    np.testing.assert_array_equal(a.measured_cpu, b.measured_cpu)
+    np.testing.assert_array_equal(a.queue_len, b.queue_len)
+    assert a.makespan == b.makespan

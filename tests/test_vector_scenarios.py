@@ -1,0 +1,186 @@
+"""End-to-end multi-resource scenarios: the vector IRM driving the cluster
+sim (and the serving adapter) on the registered memory-bound and
+mixed-accelerator workloads, plus equivalence of the per-dimension time
+series between the indexed and reference simulations."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import simulate, simulate_reference
+from repro.scenarios import (
+    VECTOR_POLICIES,
+    get_scenario,
+    policies_for,
+    run_scenario,
+    sweep_policies,
+)
+
+VECTOR_SCENARIOS = ("microscopy-mem", "mixed-accel")
+
+
+def smoke_kwargs(scn):
+    return dict(n_runs=1, stream_overrides=scn.smoke_overrides,
+                t_max=scn.smoke_t_max)
+
+
+# ---------------------------------------------------------------------------
+# Registered scenarios run end-to-end with a vector policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", VECTOR_SCENARIOS)
+def test_vector_scenario_completes_and_meets_expectations(name):
+    scn = get_scenario(name)
+    result = run_scenario(scn, **smoke_kwargs(scn))
+    assert result.policy == "vector-first-fit"  # the scenario's IRM config
+    assert result.ok, result.expectations
+    res = result.final
+    assert res.completed == res.total > 0
+    # per-dimension records exist and never exceed worker capacity
+    assert res.scheduled_res is not None and res.measured_res is not None
+    D = len(res.resource_dims)
+    assert res.scheduled_res.shape == res.measured_cpu.shape + (D,)
+    assert (res.scheduled_res <= 1.0 + 1e-9).all()
+    # the recorded scalar CPU series is exactly dimension 0
+    np.testing.assert_array_equal(res.scheduled_cpu,
+                                  res.scheduled_res[:, :, 0])
+    np.testing.assert_array_equal(res.measured_cpu,
+                                  res.measured_res[:, :, 0])
+
+
+def test_memory_bound_packing_beats_cpu_only_density():
+    """The point of the vector API: on microscopy-mem a worker hosts only
+    as many concurrent analyses as its *memory* fits (~2-3), far below the
+    8 its CPU alone would allow."""
+    scn = get_scenario("microscopy-mem")
+    res = run_scenario(scn, **smoke_kwargs(scn)).final
+    d = res.resource_dims.index("mem")
+    mem = res.measured_res[:, :, d]
+    cpu = res.measured_res[:, :, 0]
+    assert mem.max() > 0.6          # memory actually fills workers
+    assert cpu.max() < 0.7          # CPU never comes close to full
+    # rigid dimension: measured memory stays within capacity everywhere
+    assert (mem <= 1.0 + 1e-9).all()
+
+
+def test_mixed_accel_scenario_interleaves_tenants():
+    scn = get_scenario("mixed-accel")
+    res = run_scenario(scn, **smoke_kwargs(scn)).final
+    d = res.resource_dims.index("accel")
+    accel = res.scheduled_res[:, :, d]
+    cpu = res.scheduled_res[:, :, 0]
+    # both dimensions carry real load, and some worker holds both at once
+    assert accel.max() > 0.3 and cpu.max() > 0.4
+    assert ((accel > 0.2) & (cpu > 0.3)).any()
+
+
+# ---------------------------------------------------------------------------
+# Policy sweeps over the vector family (the CLI's --policy all path)
+# ---------------------------------------------------------------------------
+
+
+def test_policies_for_picks_the_right_family():
+    assert tuple(policies_for("microscopy-mem")) == VECTOR_POLICIES
+    assert tuple(policies_for("mixed-accel")) == VECTOR_POLICIES
+    assert "first-fit" in policies_for("synthetic")
+    assert "vector-first-fit" not in policies_for("synthetic")
+
+
+@pytest.mark.parametrize("name", VECTOR_SCENARIOS)
+def test_sweep_policies_over_vector_family(name):
+    """Acceptance: both multi-resource scenarios run end-to-end through
+    sweep_policies with vector packing policies."""
+    scn = get_scenario(name)
+    policies = ("vector-first-fit", "vector-best-fit", "dominant-fit",
+                "vector-ffd")
+    results = sweep_policies(scn, policies, jobs=1, **smoke_kwargs(scn))
+    assert list(results) == list(policies)
+    for policy, result in results.items():
+        assert result.policy == policy
+        assert result.ok, (policy, result.expectations)
+        assert result.final.completed == result.final.total
+        assert (result.final.scheduled_res <= 1.0 + 1e-9).all()
+
+
+def test_scalar_policy_auto_promotes_on_vector_scenario():
+    """A scalar policy name on a multi-resource scenario transparently uses
+    its vector generalization (first-fit-tree -> vector-first-fit)."""
+    scn = get_scenario("microscopy-mem")
+    a = run_scenario(scn, policy="first-fit-tree", **smoke_kwargs(scn)).final
+    b = run_scenario(scn, policy="vector-first-fit", **smoke_kwargs(scn)).final
+    np.testing.assert_array_equal(a.scheduled_res, b.scheduled_res)
+    assert a.makespan == b.makespan
+
+
+# ---------------------------------------------------------------------------
+# Indexed sim == reference sim on the per-dimension series
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", VECTOR_SCENARIOS)
+def test_vector_dimension_series_match_reference(name):
+    """test_sim_equivalence pins the scalar fields; this pins the new
+    per-dimension arrays between the two simulation implementations."""
+    scn = get_scenario(name)
+    cfg = dataclasses.replace(scn.sim_config(), t_max=scn.smoke_t_max)
+    ov = scn.smoke_overrides
+    a = simulate(scn.make_stream(0, **ov), cfg)
+    b = simulate_reference(scn.make_stream(0, **ov), cfg)
+    assert a.resource_dims == b.resource_dims == cfg.resource_dims
+    np.testing.assert_array_equal(a.measured_res, b.measured_res)
+    np.testing.assert_array_equal(a.scheduled_res, b.scheduled_res)
+
+
+def test_persistent_irm_carries_scalar_profile_onto_vector_cluster():
+    """Regression: the paper's cross-run profiler persistence must survive a
+    scalar run followed by a multi-resource run on the same IRM (stale float
+    samples used to crash the vector load predictor)."""
+    from repro.core import IRM, IRMConfig
+    from repro.scenarios import usecase_workload
+
+    irm = IRM(IRMConfig())
+    scalar_scn = get_scenario("microscopy")
+    cfg = dataclasses.replace(scalar_scn.sim_config(), t_max=600.0)
+    res = simulate(usecase_workload(
+        seed=0, n_images=20, duration_range=(4.0, 8.0),
+        image="haste/cellprofiler-bigimg:3.1.9",
+    ), cfg, irm=irm)
+    assert res.completed == res.total
+
+    scn = get_scenario("microscopy-mem")  # same image name, now with mem
+    vcfg = dataclasses.replace(scn.sim_config(), t_max=scn.smoke_t_max)
+    vres = simulate(scn.make_stream(0, **scn.smoke_overrides), vcfg, irm=irm)
+    assert vres.completed == vres.total
+    assert (vres.scheduled_res <= 1.0 + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# Serving adapter: resource dimensions map onto replica dimensions
+# ---------------------------------------------------------------------------
+
+
+def test_stream_to_requests_maps_mem_to_prompt_and_accel_to_decode():
+    from repro.scenarios import Message, Stream, stream_to_requests
+
+    plain = Message(image="a", duration=10.0)
+    heavy = Message(image="a", duration=10.0, resources={"mem": 0.5})
+    accel = Message(image="a", duration=10.0, resources={"accel": 0.5})
+    sched = stream_to_requests(Stream(batches=[(0.0, [plain, heavy, accel])]))
+    p, h, a = (r for _, r in sched)
+    assert h.prompt_len > p.prompt_len          # memory -> bigger KV demand
+    assert h.max_new_tokens == p.max_new_tokens
+    assert a.max_new_tokens > p.max_new_tokens  # accel -> more decode work
+    assert a.prompt_len == p.prompt_len
+
+
+def test_serving_backend_drains_vector_scenario():
+    from repro.scenarios import run_serving_scenario
+
+    scn = get_scenario("microscopy-mem")
+    summary = run_serving_scenario(
+        scn, stream_overrides=scn.smoke_overrides, t_max=600.0,
+    )
+    assert summary["completed"] == summary["submitted"] > 0
+    assert summary["peak_replicas"] >= 1
