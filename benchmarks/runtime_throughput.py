@@ -1,0 +1,174 @@
+"""Live-runtime throughput: messages/s, latency percentiles, IRM overhead.
+
+Runs registered scenarios on the live asyncio backend (``repro.runtime``)
+and records what a streaming operator actually cares about:
+
+  - **messages/s** — completed messages per *wall* second (broker + PE
+    task + payload + control-loop overhead, all real);
+  - **end-to-end latency** — per-message ``done - arrival`` in scenario
+    seconds, p50/p95/p99 (queueing + start delays + service time);
+  - **IRM decision latency** — wall milliseconds per ``IRM.step`` against
+    the live cluster view (the control plane's own cost, which the
+    discrete sim can never measure: there it *is* the simulation loop).
+
+Writes ``BENCH_runtime.json``:
+
+    {
+      "schema": "BENCH_runtime/v1",
+      "smoke": true,
+      "time_scale": 0.01,
+      "payload": "sleep",
+      "scenarios": {
+        "microscopy": {
+          "completed": 40, "total": 40, "wall_s": ...,
+          "messages_per_s": ..., "ticks": ..., "makespan_s": ...,
+          "latency_s": {"p50": ..., "p95": ..., "p99": ...},
+          "irm_step_ms": {"mean": ..., "p50": ..., "p99": ...},
+          "max_target_workers": ..., "peak_pe_count": ...
+        }, ...
+      },
+      "meta": {...}
+    }
+
+``--smoke`` uses each scenario's registered smoke overrides (the CI
+invocation; the artifact is uploaded next to ``BENCH_sim.json``).  Exits
+nonzero if any scenario fails to complete ≥90% of its stream — a live
+backend that drops work is broken, not slow.
+
+Usage:
+    PYTHONPATH=src python benchmarks/runtime_throughput.py --smoke \
+        [--scenarios microscopy,synthetic] [--time-scale 0.01] \
+        [--payload sleep|jax] [--out BENCH_runtime.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime import RuntimeConfig, run_live
+from repro.scenarios import get_scenario
+
+DEFAULT_SCENARIOS = ("synthetic", "microscopy", "microscopy-mem")
+
+
+def bench_scenario(
+    name: str, *, smoke: bool, time_scale: float, payload: str
+) -> Dict:
+    scn = get_scenario(name)
+    cfg = scn.sim_config()
+    overrides: Dict = {}
+    if smoke:
+        overrides = dict(scn.smoke_overrides or {})
+        if scn.smoke_t_max is not None:
+            cfg.t_max = scn.smoke_t_max
+
+    stream = scn.make_stream(0, **overrides)
+    stats: Dict = {}
+    res = run_live(
+        stream, cfg, irm_config=scn.irm_config(),
+        runtime=RuntimeConfig(time_scale=time_scale, payload=payload),
+        stats=stats,
+    )
+    # wall/throughput come from the driver's own stats, which start the
+    # clock *after* payload construction — otherwise JaxPayload's one-off
+    # jit warm-up would deflate messages/s on short runs
+    wall = float(stats["wall_s"])
+
+    done = [m for m in res.messages if m.done_t >= 0]
+    lat = np.array([m.done_t - m.arrival for m in done]) if done else np.zeros(1)
+    return {
+        "completed": int(res.completed),
+        "total": int(res.total),
+        "wall_s": wall,
+        "messages_per_s": float(stats["messages_per_s"]),
+        "ticks": int(stats.get("ticks", len(res.times))),
+        "makespan_s": float(res.makespan),
+        "latency_s": {
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+        },
+        "irm_step_ms": {
+            "mean": stats.get("irm_step_ms_mean", 0.0),
+            "p50": stats.get("irm_step_ms_p50", 0.0),
+            "p99": stats.get("irm_step_ms_p99", 0.0),
+        },
+        "max_target_workers": int(res.target_workers.max()),
+        "peak_pe_count": int(res.pe_count.max()),
+    }
+
+
+def run(out: str = "BENCH_runtime.json", *, smoke: bool = False,
+        scenarios: Optional[List[str]] = None, time_scale: float = 0.01,
+        payload: str = "sleep") -> Dict:
+    names = list(scenarios or DEFAULT_SCENARIOS)
+    result = {
+        "schema": "BENCH_runtime/v1",
+        "smoke": bool(smoke),
+        "time_scale": time_scale,
+        "payload": payload,
+        "scenarios": {},
+        "meta": {
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "platform": platform.platform(),
+        },
+    }
+    ok = True
+    for name in names:
+        row = bench_scenario(
+            name, smoke=smoke, time_scale=time_scale, payload=payload
+        )
+        result["scenarios"][name] = row
+        ok &= row["completed"] >= 0.9 * row["total"]
+        print(
+            f"{name:<15} done={row['completed']:>4}/{row['total']:<4} "
+            f"wall={row['wall_s']:6.2f}s "
+            f"msgs/s={row['messages_per_s']:7.1f} "
+            f"lat p50/p99={row['latency_s']['p50']:6.1f}/"
+            f"{row['latency_s']['p99']:6.1f}s "
+            f"irm p50/p99={row['irm_step_ms']['p50']:.2f}/"
+            f"{row['irm_step_ms']['p99']:.2f}ms"
+        )
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nwrote {out}")
+    if not ok:
+        print("ERROR: a scenario completed < 90% of its stream",
+              file=sys.stderr)
+    return result
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/runtime_throughput.py",
+        description="Throughput/latency of the live asyncio runtime backend.",
+    )
+    ap.add_argument("--out", default="BENCH_runtime.json",
+                    help="output JSON path (default: ./BENCH_runtime.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long run on each scenario's smoke overrides")
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS),
+                    help="comma-separated registered scenario names")
+    ap.add_argument("--time-scale", type=float, default=0.01,
+                    help="wall seconds per scenario second")
+    ap.add_argument("--payload", default="sleep",
+                    help="PE payload: sleep (calibrated) or jax (real kernel)")
+    args = ap.parse_args(argv)
+    names = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    result = run(args.out, smoke=args.smoke, scenarios=names,
+                 time_scale=args.time_scale, payload=args.payload)
+    return 0 if all(
+        r["completed"] >= 0.9 * r["total"]
+        for r in result["scenarios"].values()
+    ) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,6 +39,7 @@ from .load_predictor import LoadPredictor, LoadPredictorConfig, ScaleDecision
 from .profiler import MasterProfiler, ProfilerConfig, WorkerProbe
 from .queues import AllocationQueue, ContainerQueue, HostRequest
 from .sim import SimCluster, SimConfig, SimResult, simulate
+from .view_conformance import verify_cluster_view
 from .sim_reference import ReferenceSimCluster, simulate_reference
 from .spark_baseline import SparkConfig, SparkResult, simulate_spark
 from .workloads import Message, Stream, synthetic_workload, usecase_workload
@@ -90,6 +91,7 @@ __all__ = [
     "ContainerQueue",
     "HostRequest",
     "SimCluster",
+    "verify_cluster_view",
     "SimConfig",
     "SimResult",
     "simulate",

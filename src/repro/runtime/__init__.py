@@ -1,0 +1,34 @@
+"""Live streaming runtime: a real asyncio master/worker backend for the IRM.
+
+The third ``ClusterView`` implementation (after the discrete-event
+simulator and the serving engine): an in-process but genuinely concurrent
+master/worker system — per-image FIFO broker, PE tasks running pluggable
+payloads, lifecycle actuation with boot delays — that the *unmodified*
+IRM schedules.  ``run_live`` mirrors ``core.sim.simulate`` and returns a
+``SimResult``, so every scenario, summary metric, and expectation check
+runs on either backend (``run_scenario(..., backend="live")``).
+"""
+
+from .clock import ScaledClock
+from .lifecycle import Lifecycle
+from .live import LiveCluster, RuntimeConfig, run_live
+from .master import Master
+from .payloads import JaxPayload, SleepPayload, make_payload
+from .trace import TraceRecorder
+from .worker import LivePE, LiveWorker, WorkerPool
+
+__all__ = [
+    "ScaledClock",
+    "Lifecycle",
+    "LiveCluster",
+    "RuntimeConfig",
+    "run_live",
+    "Master",
+    "JaxPayload",
+    "SleepPayload",
+    "make_payload",
+    "TraceRecorder",
+    "LivePE",
+    "LiveWorker",
+    "WorkerPool",
+]

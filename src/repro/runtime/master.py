@@ -1,0 +1,143 @@
+"""Live master: asyncio message broker with per-image FIFO queues.
+
+The HarmonicIO master holds the stream backlog and hands messages directly
+to idle PEs (P2P): a PE of image ``i`` asks for work and receives the
+*globally first* queued message of that image.  This module reproduces the
+master as an in-process asyncio broker with exactly the simulator's queue
+structure — per-image FIFO deques keyed by a global arrival sequence number
+(front re-inserts take decreasing negative numbers, i.e. ``insert(0, m)``
+semantics) — so backlog observations (`queue_length`, `queue_image_mix`,
+``backlog_head``) are defined identically on both backends.
+
+Handoff is pull-based: PEs call ``pull`` (synchronous, single-threaded on
+the event loop, so no locks) and park on a per-image ``asyncio.Event``
+while their queue is empty.  Completion tracking lives here too: the
+driver awaits ``drained`` instead of polling.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import heapq
+from collections import deque
+from itertools import islice
+from typing import Deque, Dict, List, Optional, Tuple
+
+from ..core.workloads import Message
+
+__all__ = ["Master"]
+
+
+class Master:
+    """In-process asyncio broker: the live runtime's stream master."""
+
+    def __init__(self, total_expected: int = 0):
+        self._img_queues: Dict[str, Deque[Tuple[int, Message]]] = {}
+        self._qlen = 0
+        self._seq_back = 0
+        self._seq_front = 0
+        self._events: Dict[str, asyncio.Event] = {}
+        self.total_expected = int(total_expected)
+        self.completed: List[Message] = []
+        self.max_done_t = 0.0
+        self.arrivals_closed = False
+        self.drained = asyncio.Event()
+
+    # ---- enqueue ----------------------------------------------------------
+    def _event(self, image: str) -> asyncio.Event:
+        ev = self._events.get(image)
+        if ev is None:
+            ev = self._events[image] = asyncio.Event()
+        return ev
+
+    def push_back(self, m: Message) -> None:
+        """Normal arrival: append in global FIFO order."""
+        self._seq_back += 1
+        dq = self._img_queues.get(m.image)
+        if dq is None:
+            dq = self._img_queues[m.image] = deque()
+        dq.append((self._seq_back, m))
+        self._qlen += 1
+        self._event(m.image).set()
+
+    def push_front(self, m: Message) -> None:
+        """Head re-insert (failure requeue): ``list.insert(0, m)`` semantics."""
+        self._seq_front -= 1
+        dq = self._img_queues.get(m.image)
+        if dq is None:
+            dq = self._img_queues[m.image] = deque()
+        dq.appendleft((self._seq_front, m))
+        self._qlen += 1
+        self._event(m.image).set()
+
+    def close_arrivals(self) -> None:
+        """No further pushes will come; enables drain detection."""
+        self.arrivals_closed = True
+        self._check_drained()
+
+    # ---- backlog observation (identical shape to SimCluster) --------------
+    def queue_length(self) -> float:
+        return float(self._qlen)
+
+    def queue_image_mix(self) -> Dict[str, float]:
+        # insertion order follows each image's first occurrence in global
+        # FIFO order (deque-head sequence number) — the IRM's apportionment
+        # breaks ties by this order, same as the sim backend.
+        if self._qlen == 0:
+            return {}
+        heads = sorted(
+            (dq[0][0], img, len(dq))
+            for img, dq in self._img_queues.items()
+            if dq
+        )
+        n = float(self._qlen)
+        return {img: cnt / n for _, img, cnt in heads}
+
+    def backlog_head(self, k: int) -> List[Message]:
+        """The first ``k`` queued messages in global FIFO order."""
+        if self._qlen == 0 or k <= 0:
+            return []
+        live = [iter(dq) for dq in self._img_queues.values() if dq]
+        if len(live) == 1:
+            return [m for _, m in islice(live[0], k)]
+        return [m for _, m in islice(heapq.merge(*live), k)]
+
+    # ---- P2P handoff ------------------------------------------------------
+    def head(self, image: str) -> Optional[Message]:
+        """Peek this image's FIFO head (head-blocking gates inspect it)."""
+        dq = self._img_queues.get(image)
+        return dq[0][1] if dq else None
+
+    def pull(self, image: str) -> Optional[Message]:
+        """Pop this image's FIFO head; clears the wakeup when it empties."""
+        dq = self._img_queues.get(image)
+        if not dq:
+            return None
+        _, m = dq.popleft()
+        self._qlen -= 1
+        if not dq:
+            self._event(image).clear()
+        return m
+
+    async def wait_for_work(self, image: str, wall_timeout: float) -> None:
+        """Park until a message of ``image`` arrives or the timeout passes."""
+        ev = self._event(image)
+        try:
+            await asyncio.wait_for(ev.wait(), max(wall_timeout, 0.0))
+        except asyncio.TimeoutError:
+            pass
+
+    # ---- completion -------------------------------------------------------
+    def complete(self, msg: Message) -> None:
+        self.completed.append(msg)
+        if msg.done_t > self.max_done_t:
+            self.max_done_t = msg.done_t
+        self._check_drained()
+
+    def _check_drained(self) -> None:
+        if (
+            self.arrivals_closed
+            and self._qlen == 0
+            and len(self.completed) >= self.total_expected
+        ):
+            self.drained.set()

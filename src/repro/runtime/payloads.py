@@ -1,0 +1,96 @@
+"""Pluggable PE payloads: what a live processing element *does* per message.
+
+A payload is an async callable ``(msg, clock) -> None`` awaited by the PE
+task while it holds the message; when it returns, the message is complete.
+Two built-ins:
+
+- ``sleep`` — a calibrated timed wait: the PE occupies its slot for exactly
+  ``msg.duration`` scenario seconds, so service times mirror the stream
+  generator's distributions and the live runtime's scheduling dynamics are
+  directly comparable to the discrete-event simulator.
+- ``jax`` — runs a real repro kernel (the grouped-matmul reference path,
+  which executes on CPU) in a worker thread per message, then pads with a
+  calibrated sleep up to ``msg.duration``.  This exercises genuine
+  serialization/compute interleaving on the event loop: the master keeps
+  brokering and the IRM keeps packing while XLA crunches.
+
+Payloads resolve by name through ``make_payload`` so scenarios/CLI can
+select them (``--payload jax``), mirroring ``core.binpack.make_packer``.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Callable, Dict
+
+__all__ = ["SleepPayload", "JaxPayload", "make_payload", "PAYLOADS"]
+
+
+class SleepPayload:
+    """Occupy the PE for ``msg.duration`` scenario seconds (timed wait)."""
+
+    name = "sleep"
+
+    async def __call__(self, msg, clock) -> None:
+        await clock.sleep(msg.duration)
+
+
+class JaxPayload:
+    """Run a real JAX kernel per message, padded to ``msg.duration``.
+
+    Each message triggers one grouped-matmul (``kernels.grouped_matmul.gmm``
+    on its jnp reference path, so it runs on CPU without a TPU) in a thread
+    executor — the event loop, master broker, and IRM stay live while the
+    computation runs — then sleeps whatever remains of the message's
+    scenario-time duration so the *schedule* stays calibrated to the
+    stream's service-time distribution regardless of host speed.
+    """
+
+    name = "jax"
+
+    def __init__(self, experts: int = 4, rows: int = 64, dim: int = 64):
+        # Import here so the live runtime stays usable without jax installed
+        # (the sleep payload has no such dependency).
+        import jax.numpy as jnp
+        import numpy as np
+
+        from ..kernels.grouped_matmul.ops import gmm
+
+        self._gmm = gmm
+        rng = np.random.default_rng(0)
+        self._x = jnp.asarray(
+            rng.standard_normal((experts, rows, dim)), jnp.float32
+        )
+        self._w = jnp.asarray(
+            rng.standard_normal((experts, dim, dim)), jnp.float32
+        )
+        self._sizes = jnp.full((experts,), rows, jnp.int32)
+        self._compute()  # warm the jit cache outside any message's budget
+
+    def _compute(self) -> None:
+        self._gmm(self._x, self._w, self._sizes, use_kernel=False).block_until_ready()
+
+    async def __call__(self, msg, clock) -> None:
+        loop = asyncio.get_running_loop()
+        wall0 = time.perf_counter()
+        await loop.run_in_executor(None, self._compute)
+        spent_virtual = (time.perf_counter() - wall0) / clock.time_scale
+        await clock.sleep(msg.duration - spent_virtual)
+
+
+PAYLOADS: Dict[str, Callable[[], object]] = {
+    "sleep": SleepPayload,
+    "jax": JaxPayload,
+}
+
+
+def make_payload(name: str, **kwargs):
+    """Resolve a payload by name (mirrors ``core.binpack.make_packer``)."""
+    try:
+        factory = PAYLOADS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown payload {name!r}; available: {sorted(PAYLOADS)}"
+        ) from None
+    return factory(**kwargs)

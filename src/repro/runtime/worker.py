@@ -1,0 +1,203 @@
+"""Live workers: asyncio tasks hosting processing elements.
+
+A ``LiveWorker`` models one worker VM (boot delay, per-image probe,
+hosting capacity in resource fractions); each PE it hosts is a real
+asyncio task running the pull-execute loop the paper describes:
+
+    start delay → idle → P2P pull from the master → execute payload →
+    idle → ... → idle-timeout self-termination
+
+State enums are shared with the simulator (``core.sim.PEState`` /
+``WorkerState``) so observation code — scheduled-load views, measurement,
+trace recording — reads both backends with identical logic.  All state
+mutation happens on the event loop thread; payload *compute* may run in
+executor threads (see ``payloads.JaxPayload``) but completion bookkeeping
+re-enters the loop.
+
+Vector mode: non-CPU dimensions are rigid, so an idle PE only pulls while
+its worker's *currently running* messages leave room in every auxiliary
+dimension (the sim's congestion gate, restated over live BUSY PEs — the
+live runtime cannot key on ``done_t > t`` because a running message's
+completion time is unknown until the payload returns).  The FIFO head
+blocks rather than being skipped, exactly as in the simulator.
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import List, Optional, Set, Tuple
+
+from ..core.profiler import WorkerProbe
+from ..core.queues import HostRequest
+from ..core.sim import PEState, SimConfig, WorkerState
+from ..core.workloads import Message
+from .clock import ScaledClock
+from .master import Master
+
+__all__ = ["LivePE", "LiveWorker", "WorkerPool", "live_worker_fits_message"]
+
+
+def live_worker_fits_message(pes, msg: Message, dims: Tuple[str, ...]) -> bool:
+    """Rigid non-CPU gate over a live worker's *busy* PEs."""
+    mres = msg.resources
+    busy = PEState.BUSY
+    for d in dims[1:]:
+        need = mres.get(d, 0.0) if mres else 0.0
+        committed = 0.0
+        for pe in pes:
+            pmsg = pe.msg
+            if pe.state is busy and pmsg is not None and pmsg.resources:
+                committed += pmsg.resources.get(d, 0.0)
+        if committed + need > 1.0 + 1e-9:
+            return False
+    return True
+
+
+class LivePE:
+    """One processing element: state + the asyncio task driving it."""
+
+    __slots__ = ("image", "state", "msg", "idle_since", "estimate", "uid",
+                 "task")
+
+    def __init__(self, image: str, estimate, uid: int):
+        self.image = image
+        self.state = PEState.STARTING
+        self.msg: Optional[Message] = None
+        self.idle_since = -1.0
+        self.estimate = estimate  # size estimate at placement time (scheduled)
+        self.uid = uid
+        self.task: Optional[asyncio.Task] = None
+
+
+class LiveWorker:
+    """One worker VM: boots with a delay, hosts PE tasks, carries a probe."""
+
+    __slots__ = ("idx", "state", "ready_t", "pes", "probe")
+
+    def __init__(self, idx: int, t: float, boot_delay: float):
+        self.idx = idx
+        self.state = (
+            WorkerState.BOOTING if boot_delay > 0 else WorkerState.ACTIVE
+        )
+        self.ready_t = t + boot_delay
+        self.pes: List[LivePE] = []
+        self.probe = WorkerProbe()
+
+
+class WorkerPool:
+    """Hosts workers and runs their PEs as asyncio tasks."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        master: Master,
+        clock: ScaledClock,
+        payload,
+        poll_interval: float,
+    ):
+        self.cfg = cfg
+        self.master = master
+        self.clock = clock
+        self.payload = payload
+        # how often a gated (vector-blocked) idle PE re-checks the head,
+        # in scenario seconds
+        self.poll_interval = poll_interval
+        self.workers: List[LiveWorker] = []
+        self._dims = tuple(cfg.resource_dims)
+        self._multi = len(self._dims) > 1
+        self._pe_uid = 0
+        self._tasks: Set[asyncio.Task] = set()
+
+    # ---- lifecycle hooks (called by Lifecycle / the driver) ----------------
+    def promote_booted(self, t: float) -> None:
+        """BOOTING → ACTIVE once the boot delay has elapsed."""
+        for w in self.workers:
+            if w.state is WorkerState.BOOTING and t >= w.ready_t:
+                w.state = WorkerState.ACTIVE
+
+    def n_alive(self) -> int:
+        return sum(1 for w in self.workers if w.state is not WorkerState.OFF)
+
+    def pe_count(self) -> int:
+        return sum(len(w.pes) for w in self.workers)
+
+    # ---- placement actuation ----------------------------------------------
+    def try_start_pe(self, req: HostRequest) -> bool:
+        """Start a PE on the placed worker; False while the VM still boots."""
+        idx = req.target_worker
+        if idx is None or idx >= len(self.workers):
+            return False
+        w = self.workers[idx]
+        if w.state is not WorkerState.ACTIVE:
+            return False  # "a new VM still initializing" (paper V-B.2)
+        self._pe_uid += 1
+        pe = LivePE(req.image, req.size_estimate, uid=self._pe_uid)
+        w.pes.append(pe)
+        pe.task = asyncio.get_running_loop().create_task(
+            self._pe_main(w, pe), name=f"pe-{w.idx}-{pe.uid}-{req.image}"
+        )
+        self._tasks.add(pe.task)
+        pe.task.add_done_callback(self._tasks.discard)
+        return True
+
+    # ---- the PE loop -------------------------------------------------------
+    def _gate_ok(self, worker: LiveWorker, msg: Message) -> bool:
+        return not self._multi or live_worker_fits_message(
+            worker.pes, msg, self._dims
+        )
+
+    async def _pe_main(self, worker: LiveWorker, pe: LivePE) -> None:
+        cfg = self.cfg
+        clock = self.clock
+        master = self.master
+        try:
+            await clock.sleep(cfg.pe_start_delay)
+            pe.state = PEState.IDLE
+            pe.idle_since = clock.now()
+            while True:
+                head = master.head(pe.image)
+                if head is not None and self._gate_ok(worker, head):
+                    msg = master.pull(pe.image)
+                    # single-threaded loop: the head cannot change between
+                    # peek and pull without an await in between
+                    assert msg is head
+                    pe.state = PEState.BUSY
+                    pe.msg = msg
+                    msg.start_t = clock.now()
+                    await self.payload(msg, clock)
+                    msg.done_t = clock.now()
+                    pe.msg = None
+                    pe.state = PEState.IDLE
+                    pe.idle_since = clock.now()
+                    master.complete(msg)
+                    continue
+                remaining = cfg.container_idle_timeout - (
+                    clock.now() - pe.idle_since
+                )
+                if remaining <= 0:
+                    break  # graceful self-termination
+                if head is not None:
+                    # vector-gated head: poll (head-blocking FIFO — the
+                    # blocked head is never skipped)
+                    await clock.sleep(min(remaining, self.poll_interval))
+                else:
+                    await master.wait_for_work(
+                        pe.image, clock.to_wall(remaining)
+                    )
+        except asyncio.CancelledError:
+            pass  # driver shutdown: drop the PE silently
+        finally:
+            pe.state = PEState.STOPPED
+            try:
+                worker.pes.remove(pe)
+            except ValueError:
+                pass
+
+    # ---- shutdown ----------------------------------------------------------
+    async def shutdown(self) -> None:
+        """Cancel and reap every outstanding PE task."""
+        tasks = [t for t in self._tasks if not t.done()]
+        for t in tasks:
+            t.cancel()
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)

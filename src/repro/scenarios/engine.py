@@ -1,4 +1,4 @@
-"""Scenario runner: drive a registered scenario through the IRM simulation.
+"""Scenario runner: drive a registered scenario through the IRM.
 
 One entry point — ``run_scenario`` — replaces the hand-rolled driver loops
 the benchmarks used to carry: it builds the scenario's stream(s), applies a
@@ -6,6 +6,13 @@ packing policy (any ``make_packer`` name), keeps the IRM profiler alive
 across the scenario's runs (the paper's 10-run persistence), and reduces
 the recorded time series to the same summary metrics the paper's figures
 report (utilization, scheduled-vs-measured error, worker targets).
+
+Two interchangeable execution backends share this runner: the
+discrete-event simulator (``backend="sim"``, the default — deterministic,
+tick-exact) and the live asyncio runtime (``backend="live"`` — real
+concurrent master/worker execution in scaled wall-clock time,
+``repro.runtime``).  Both return ``SimResult``-shaped records, so the
+summaries, expectation checks, and policy sweeps below are backend-blind.
 """
 
 from __future__ import annotations
@@ -62,6 +69,7 @@ class ScenarioResult:
     makespans: List[float]
     summary: Dict[str, float]
     expectations: Dict[str, bool]
+    backend: str = "sim"
 
     @property
     def final(self) -> SimResult:
@@ -123,6 +131,8 @@ def run_scenario(
     stream_overrides: Optional[Dict[str, object]] = None,
     t_max: Optional[float] = None,
     irm: Optional[IRM] = None,
+    backend: str = "sim",
+    runtime: Optional[object] = None,
 ) -> ScenarioResult:
     """Run a scenario end to end and evaluate its expectations.
 
@@ -132,7 +142,20 @@ def run_scenario(
     ``base_seed + i``, reusing one IRM so the profiler state persists across
     runs exactly as in the paper's repeated-run experiment.  ``t_max`` and
     ``stream_overrides`` shrink or grow the experiment (smoke runs, sweeps).
+
+    ``backend`` selects the execution engine: ``"sim"`` (discrete-event,
+    deterministic) or ``"live"`` (the asyncio master/worker runtime; pass a
+    ``repro.runtime.RuntimeConfig`` as ``runtime`` to control time scale
+    and payload).  The same IRM code schedules both.
     """
+    if backend not in ("sim", "live"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'sim' or 'live' "
+            "(the serving backend has its own adapter: "
+            "repro.scenarios.serving.run_serving_scenario)"
+        )
+    if runtime is not None and backend != "live":
+        raise ValueError("runtime config only applies to backend='live'")
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     irm_cfg = scn.irm_config()
     if policy is not None:
@@ -152,13 +175,18 @@ def run_scenario(
     if t_max is not None:
         sim_cfg = dataclasses.replace(sim_cfg, t_max=float(t_max))
 
+    if backend == "live":
+        from ..runtime.live import run_live
     runs: List[SimResult] = []
     makespans: List[float] = []
     n = n_runs if n_runs is not None else scn.n_runs
     overrides = stream_overrides or {}
     for i in range(n):
         stream = scn.make_stream(base_seed + i, **overrides)
-        res = simulate(stream, sim_cfg, irm=irm)
+        if backend == "live":
+            res = run_live(stream, sim_cfg, irm=irm, runtime=runtime)
+        else:
+            res = simulate(stream, sim_cfg, irm=irm)
         runs.append(res)
         makespans.append(float(res.makespan))
 
@@ -176,6 +204,7 @@ def run_scenario(
         makespans=makespans,
         summary=summary,
         expectations=expectations,
+        backend=backend,
     )
 
 
@@ -203,6 +232,8 @@ def sweep_policies(
     n_runs: Optional[int] = None,
     stream_overrides: Optional[Dict[str, object]] = None,
     t_max: Optional[float] = None,
+    backend: str = "sim",
+    runtime: Optional[object] = None,
 ) -> Dict[str, ScenarioResult]:
     """Run one scenario under every policy, one process per policy.
 
@@ -221,7 +252,8 @@ def sweep_policies(
     for p in policies:
         make_packer(p)  # validate every name before spawning workers
     kwargs = dict(base_seed=base_seed, n_runs=n_runs,
-                  stream_overrides=stream_overrides, t_max=t_max)
+                  stream_overrides=stream_overrides, t_max=t_max,
+                  backend=backend, runtime=runtime)
 
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     try:

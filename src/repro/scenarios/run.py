@@ -15,6 +15,9 @@ One entry point for every registered workload:
   # seconds-long deterministic smoke run (CI)
   python -m repro.scenarios.run bursty --smoke
 
+  # the same scenario on the live asyncio master/worker runtime
+  python -m repro.scenarios.run microscopy --smoke --backend live --time-scale 0.01
+
   # the same stream through the continuous-batching serving backend
   python -m repro.scenarios.run bursty --backend serving --smoke
 
@@ -32,6 +35,7 @@ import os
 import sys
 from typing import Dict, List, Optional
 
+from ..runtime.payloads import PAYLOADS
 from .engine import (
     POLICIES,
     VECTOR_POLICIES,
@@ -75,7 +79,9 @@ def _dump_tick_csv(path: str, result: ScenarioResult) -> None:
 
 
 def _print_summary(result: ScenarioResult) -> None:
-    print(f"\n=== scenario {result.scenario!r} · policy {result.policy!r} ===")
+    backend = "" if result.backend == "sim" else f" · backend {result.backend!r}"
+    print(f"\n=== scenario {result.scenario!r} · policy {result.policy!r}"
+          f"{backend} ===")
     for k, v in result.summary.items():
         if isinstance(v, float):
             print(f"  {k}: {v:.4g}")
@@ -95,11 +101,19 @@ def _smoke_note(scn) -> None:
 
 
 def _list(args: argparse.Namespace) -> int:
-    print(f"{'name':<14} {'runs':>4}  {'tags':<24} description")
-    print("-" * 78)
+    print(
+        f"{'name':<14} {'runs':>4}  {'dims':<10} {'policies':<8} "
+        f"{'tags':<24} description"
+    )
+    print("-" * 96)
     for scn in list_scenarios():
         tags = ",".join(scn.tags)
-        print(f"{scn.name:<14} {scn.n_runs:>4}  {tags:<24} {scn.description}")
+        dims = getattr(scn.sim_config(), "resource_dims", ("cpu",))
+        family = "vector" if len(dims) > 1 else "any-fit"
+        print(
+            f"{scn.name:<14} {scn.n_runs:>4}  {'+'.join(dims):<10} "
+            f"{family:<8} {tags:<24} {scn.description}"
+        )
         if args.verbose:
             for e in scn.expectations:
                 print(f"{'':20}  expects: {e.name} — {e.description}")
@@ -122,8 +136,16 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"multi-resource scenarios, vector ({', '.join(VECTOR_POLICIES)}); "
         "default: the scenario's configured policy",
     )
-    ap.add_argument("--backend", choices=("sim", "serving"), default="sim",
-                    help="cluster sim (paper testbed) or serving engine")
+    ap.add_argument("--backend", choices=("sim", "live", "serving"),
+                    default="sim",
+                    help="cluster sim (paper testbed), live asyncio "
+                    "master/worker runtime, or serving engine")
+    ap.add_argument("--time-scale", type=float, default=0.02,
+                    help="live backend: wall seconds per scenario second "
+                    "(smaller = faster run, more concurrency jitter)")
+    ap.add_argument("--payload", default="sleep",
+                    choices=tuple(sorted(PAYLOADS)),
+                    help="live backend: per-message PE payload")
     ap.add_argument("--seed", type=int, default=0, help="base stream seed")
     ap.add_argument("--runs", type=int, default=None,
                     help="override the scenario's run count")
@@ -205,7 +227,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         policies = [p.strip() for p in args.policy.split(",") if p.strip()]
 
     run_kwargs = dict(base_seed=args.seed, n_runs=n_runs,
-                      stream_overrides=stream_overrides, t_max=t_max)
+                      stream_overrides=stream_overrides, t_max=t_max,
+                      backend=args.backend)
+    if args.backend == "live":
+        from ..runtime.live import RuntimeConfig
+
+        run_kwargs["runtime"] = RuntimeConfig(
+            time_scale=args.time_scale, payload=args.payload
+        )
     try:
         if len(policies) > 1 and None not in policies:
             # policy sweep: one process per policy (IRM state is per-policy)

@@ -40,6 +40,7 @@ __all__ = [
     "EngineConfig",
     "ServingEngine",
     "SimulatedBackend",
+    "ServingClusterView",
 ]
 
 _req_counter = itertools.count()
@@ -300,6 +301,11 @@ class ServingEngine:
             ):
                 break
 
+    # ---- ClusterView adapter ---------------------------------------------------
+    def cluster_view(self) -> "ServingClusterView":
+        """A ``core.irm.ClusterView`` over this engine (see the class)."""
+        return ServingClusterView(self)
+
     # ---- summary -----------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         if not self.completed:
@@ -312,3 +318,78 @@ class ServingEngine:
             "p99_latency": float(np.percentile(lat, 99)),
             "peak_replicas": max(m["replicas"] for m in self.metrics),
         }
+
+
+class ServingClusterView:
+    """``core.irm.ClusterView`` adapter over a ``ServingEngine``.
+
+    The engine drives the IRM components directly in its own ``step`` (the
+    admission loop predates the protocol), but exposing the standard view
+    closes the protocol gap so backend-generic tooling — the conformance
+    suite, ad-hoc ``IRM.step`` experiments — can observe and actuate a
+    serving cluster exactly like the sim and live backends:
+
+      worker/bin  -> a live (non-retired) replica; its scheduled load is
+                     the (slots, pages) occupancy as a ``Resources`` vector
+                     with dims ``("cpu", "pages")`` (decode slots are the
+                     compute dimension, so they map onto dim 0)
+      PE/item     -> an admitted request
+      try_start_pe-> admit the oldest queued request of the placed class
+                     onto the target replica
+      scale       -> clamp and apply the engine's replica target
+    """
+
+    DIMS = ("cpu", "pages")
+
+    def __init__(self, engine: ServingEngine):
+        self.engine = engine
+
+    def queue_length(self) -> float:
+        return float(len(self.engine.queue))
+
+    def queue_image_mix(self) -> Dict[str, float]:
+        if not self.engine.queue:
+            return {}
+        counts: Dict[str, int] = {}
+        for req in self.engine.queue:
+            counts[req.req_class] = counts.get(req.req_class, 0) + 1
+        n = float(len(self.engine.queue))
+        return {cls: c / n for cls, c in counts.items()}
+
+    def worker_scheduled_loads(self) -> List["Resources"]:
+        from ..core.resources import Resources
+
+        out = []
+        for r in self.engine.backend.replicas:
+            if r.retired:
+                out.append(Resources(self.DIMS, (0.0, 0.0)))
+            else:
+                out.append(Resources(self.DIMS, r.load_fraction()))
+        return out
+
+    def backlog_resource_demand(self):
+        from ..core.resources import Resources
+
+        total = None
+        for req in list(self.engine.queue)[:64]:
+            slot, pages = self.engine._size_estimate(req)
+            v = Resources(self.DIMS, (slot, pages))
+            total = v if total is None else total + v
+        return total
+
+    def try_start_pe(self, req) -> bool:
+        idx = req.target_worker
+        replicas = self.engine.backend.replicas
+        if idx is None or idx >= len(replicas) or replicas[idx].retired:
+            return False
+        for queued in self.engine.queue:
+            if queued.req_class == req.image:
+                if replicas[idx].try_admit(queued, self.engine.t):
+                    self.engine.queue.remove(queued)
+                    return True
+                return False
+        return False
+
+    def scale_workers(self, target: int) -> None:
+        self.engine._target = max(1, min(target, self.engine.cfg.max_replicas))
+        self.engine.backend.scale_to(self.engine._target, self.engine.t)

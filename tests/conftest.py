@@ -5,11 +5,58 @@ see the real single CPU device; only ``launch/dryrun.py`` (run as its own
 process) forces 512 host devices.
 """
 
+import signal
+
 import jax
 import numpy as np
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# @pytest.mark.timeout(seconds): wall-clock budget for a single test.
+#
+# The live-runtime suites (test_runtime, test_backend_parity) drive a real
+# asyncio event loop; a deadlocked await would otherwise hang the whole CI
+# job until the job-level timeout.  The marker arms a SIGALRM-based
+# interval timer around the test call so a stuck test fails in seconds
+# with a clear message instead.  Implemented here because the environment
+# pins its dependency set (no pytest-timeout plugin); the marker name and
+# semantics match that plugin's method="signal" mode, and this hook steps
+# aside if the real plugin is ever installed.
+# ---------------------------------------------------------------------------
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    pm = item.config.pluginmanager
+    if (
+        marker is None
+        or not hasattr(signal, "SIGALRM")
+        # pytest-timeout registers as "timeout" (entry point) — probe both
+        # names so this hook steps aside whenever the real plugin is present
+        or pm.hasplugin("timeout")
+        or pm.hasplugin("pytest_timeout")
+    ):
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 60.0
+
+    def _on_timeout(signum, frame):
+        raise TimeoutError(
+            f"test exceeded its {seconds:g}s wall-clock budget "
+            "(@pytest.mark.timeout) — likely a deadlocked runtime await"
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, _on_timeout)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old_handler)
 
 
 @pytest.fixture(scope="session")

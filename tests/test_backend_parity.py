@@ -1,0 +1,91 @@
+"""Cross-backend validation: the live runtime tracks the simulator.
+
+The discrete-event sim is tick-exact; the live runtime executes the same
+scenarios as real concurrent asyncio work in scaled wall-clock time.  The
+two can never be bit-identical — that divergence under real concurrency is
+the point of having a live backend — but the *scheduling behavior* the
+paper measures must land in the same place: utilization of the workers the
+IRM opens, and how many workers it targets.  These tests pin that, for a
+scalar policy on the paper's scenarios and a vector policy on the
+multi-resource one.
+
+Tolerances are deliberately wide bands, not equalities: they catch the
+failure modes we actually saw while building the backend (phantom-bin
+livelock → utilization collapses to ~half; arrival race → worker target
+overshoots by 2x) while staying robust to honest scheduling jitter.
+"""
+
+import pytest
+
+from repro.runtime import RuntimeConfig
+from repro.scenarios.engine import run_scenario
+from repro.scenarios.registry import get_scenario
+
+# 1 scenario second = 10 ms wall: fast enough for CI, coarse enough that
+# event-loop jitter on a loaded runner stays small relative to the delays
+FAST = RuntimeConfig(time_scale=0.01)
+
+
+def _pair(name: str, policy: str, seed: int = 0):
+    scn = get_scenario(name)
+    kwargs = dict(
+        policy=policy,
+        base_seed=seed,
+        n_runs=1,
+        stream_overrides=scn.smoke_overrides,
+        t_max=scn.smoke_t_max,
+    )
+    sim = run_scenario(name, backend="sim", **kwargs)
+    live = run_scenario(name, backend="live", runtime=FAST, **kwargs)
+    return sim, live
+
+
+def _assert_parity(sim, live, *, util_tol: float, target_tol: int,
+                   makespan_ratio: float):
+    s, l = sim.summary, live.summary
+    # both backends process (nearly) the whole stream
+    assert l["completed"] >= 0.9 * l["total"]
+    assert s["completed"] >= 0.9 * s["total"]
+    # utilization of scheduled-active worker cells
+    assert l["mean_scheduled_utilization_active"] == pytest.approx(
+        s["mean_scheduled_utilization_active"], abs=util_tol
+    )
+    # worker-target trajectory endpoints
+    assert abs(l["max_target_workers"] - s["max_target_workers"]) <= target_tol
+    lf = int(live.final.target_workers[-1])
+    sf = int(sim.final.target_workers[-1])
+    assert abs(lf - sf) <= target_tol
+    # end-to-end drain time within a band of the sim's
+    assert l["makespan_s"] <= makespan_ratio * s["makespan_s"]
+    assert l["makespan_s"] >= s["makespan_s"] / makespan_ratio
+
+
+@pytest.mark.timeout(180)
+def test_live_matches_sim_synthetic_first_fit():
+    """Scalar policy, the paper's Sec. VI-A scenario."""
+    sim, live = _pair("synthetic", "first-fit")
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)
+
+
+@pytest.mark.timeout(180)
+def test_live_matches_sim_microscopy_first_fit():
+    """Scalar policy, the paper's Sec. VI-B use case."""
+    sim, live = _pair("microscopy", "first-fit")
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)
+    # both concentrate load on low-index workers (Fig. 3 behavior)
+    assert live.summary["low_index_load_fraction"] > 0.6
+    assert sim.summary["low_index_load_fraction"] > 0.6
+
+
+@pytest.mark.timeout(180)
+def test_live_matches_sim_vector_policy():
+    """Vector policy on the multi-resource scenario: same bottleneck
+    dimension, same capacity guarantees, comparable packing density."""
+    sim, live = _pair("microscopy-mem", "vector-first-fit")
+    _assert_parity(sim, live, util_tol=0.2, target_tol=3,
+                   makespan_ratio=1.8)
+    assert live.summary["bottleneck_dim"] == sim.summary["bottleneck_dim"]
+    for res in (live.final, sim.final):
+        assert (res.scheduled_res <= 1.0 + 1e-9).all()

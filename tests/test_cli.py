@@ -9,6 +9,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 from repro.scenarios.run import main
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -40,6 +42,32 @@ def test_cli_list_shows_catalogue(capsys):
     out = capsys.readouterr().out
     for name in ("synthetic", "microscopy", "microscopy-mem", "mixed-accel"):
         assert name in out
+
+
+def test_cli_list_shows_dims_and_policy_family(capsys):
+    """--list prints each scenario's resource dims and its policy family."""
+    assert run_cli("--list") == 0
+    out = capsys.readouterr().out
+    header, *rows = out.splitlines()
+    assert "dims" in header and "policies" in header
+    by_name = {r.split()[0]: r for r in rows if r and not r.startswith("-")}
+    # scalar scenario: cpu-only dims, Any-Fit family
+    assert "cpu " in by_name["synthetic"] or "cpu\t" in by_name["synthetic"]
+    assert "any-fit" in by_name["synthetic"]
+    # vector scenarios: their extra dimension and the vector family
+    assert "cpu+mem" in by_name["microscopy-mem"]
+    assert "vector" in by_name["microscopy-mem"]
+    assert "cpu+accel" in by_name["mixed-accel"]
+
+
+@pytest.mark.timeout(120)
+def test_cli_live_backend_smoke(capsys):
+    """--backend live drives the asyncio runtime through the same CLI."""
+    assert run_cli("microscopy", "--smoke", "--backend", "live",
+                   "--time-scale", "0.005", "--jobs", "1") == 0
+    out = capsys.readouterr().out
+    assert "backend 'live'" in out
+    assert "makespan_s" in out
 
 
 def test_cli_unknown_scenario_exits_2(capsys):
