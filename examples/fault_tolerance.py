@@ -7,19 +7,25 @@ Four scenarios, all runnable on one CPU:
   2. elastic restore: the same checkpoint restored onto a different mesh
      (device_put against the current topology's shardings),
   3. a worker VM dying mid-stream: in-flight messages bounce back to the
-     master queue (at-least-once) and the workload still completes,
+     master queue (at-least-once) and the workload still completes —
+     on the discrete-event sim, the live asyncio runtime, or both
+     (``--backend``; ``tests/test_backend_parity.py`` pins the two
+     backends to *identical* requeue counts on the registered scenario),
   4. failed container placements TTL-requeueing through the container queue.
 
 Usage:
   PYTHONPATH=src python examples/fault_tolerance.py
+  PYTHONPATH=src python examples/fault_tolerance.py --backend live
+  PYTHONPATH=src python examples/fault_tolerance.py --backend both --smoke
+
+``--smoke`` runs only the streaming scenarios (3 and 4) — the CI
+live-smoke job uses it to keep the kill path exercised without paying
+for model training.
 """
 
+import argparse
 import tempfile
 
-import jax
-
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_config
 from repro.core import (
     AllocationQueue,
     ContainerQueue,
@@ -28,14 +34,23 @@ from repro.core import (
     simulate,
 )
 from repro.scenarios import get_scenario
-from repro.distributed import param_shardings
-from repro.launch.mesh import make_local_mesh
-from repro.models import build_model, init_params, make_batch
-from repro.training import OptimizerConfig, init_opt_state, make_train_step
-from repro.training.controller import TrainController, TrainControllerConfig
 
 
 def scenario_1_crash_restart(tmp: str) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model, init_params, make_batch
+    from repro.training import (
+        OptimizerConfig,
+        init_opt_state,
+        make_train_step,
+    )
+    from repro.training.controller import (
+        TrainController,
+        TrainControllerConfig,
+    )
+
     print("=" * 64)
     print("1. Training crash -> restart from latest checkpoint")
     print("=" * 64)
@@ -62,6 +77,14 @@ def scenario_1_crash_restart(tmp: str) -> None:
 
 
 def scenario_2_elastic_restore(tmp: str) -> None:
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.distributed import param_shardings
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model, init_params
+
     print("=" * 64)
     print("2. Elastic restore onto the current mesh")
     print("=" * 64)
@@ -80,20 +103,29 @@ def scenario_2_elastic_restore(tmp: str) -> None:
           f"first leaf sharding: {leaf.sharding}\n")
 
 
-def scenario_3_worker_failure() -> None:
+def scenario_3_worker_failure(backends) -> None:
     print("=" * 64)
     print("3. Worker VM failure mid-stream (messages requeued, run completes)")
     print("=" * 64)
-    stream = get_scenario("microscopy").make_stream(
-        0, n_images=80, duration_range=(4.0, 8.0)
-    )
-    res = simulate(stream, SimConfig(
+    cfg = SimConfig(
         dt=0.5, cores_per_worker=4, max_workers=5,
         worker_boot_delay=5.0, pe_start_delay=1.0, t_max=1500.0,
         fail_worker_at=(0, 25.0),  # kill the busiest worker at t=25s
-    ))
-    print(f"worker 0 killed at t=25s; completed {res.completed}/{res.total} "
-          f"in {res.makespan:.0f}s\n")
+    )
+    make_stream = get_scenario("microscopy").make_stream
+    for backend in backends:
+        stream = make_stream(0, n_images=80, duration_range=(4.0, 8.0))
+        if backend == "live":
+            from repro.runtime import RuntimeConfig, run_live
+
+            res = run_live(stream, cfg,
+                           runtime=RuntimeConfig(time_scale=0.01))
+        else:
+            res = simulate(stream, cfg)
+        print(f"[{backend:>4}] worker 0 killed at t=25s; "
+              f"{res.requeued} in-flight messages requeued at the head; "
+              f"completed {res.completed}/{res.total} in {res.makespan:.0f}s")
+    print()
 
 
 def scenario_4_ttl_requeue() -> None:
@@ -121,10 +153,25 @@ def scenario_4_ttl_requeue() -> None:
     print(f"dropped requests: {len(cq.dropped)} (TTL never exhausted)\n")
 
 
-if __name__ == "__main__":
-    with tempfile.TemporaryDirectory() as tmp:
-        scenario_1_crash_restart(tmp)
-        scenario_2_elastic_restore(tmp)
-    scenario_3_worker_failure()
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=("sim", "live", "both"),
+                    default="sim",
+                    help="streaming backend(s) for the worker-failure "
+                    "scenario (default: sim)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="streaming scenarios only (skip model training)")
+    args = ap.parse_args()
+    backends = ("sim", "live") if args.backend == "both" else (args.backend,)
+
+    if not args.smoke:
+        with tempfile.TemporaryDirectory() as tmp:
+            scenario_1_crash_restart(tmp)
+            scenario_2_elastic_restore(tmp)
+    scenario_3_worker_failure(backends)
     scenario_4_ttl_requeue()
     print("Done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -173,6 +173,10 @@ class SimResult:
     resource_dims: Tuple[str, ...] = ("cpu",)
     measured_res: Optional[np.ndarray] = None   # (T, max_workers, D)
     scheduled_res: Optional[np.ndarray] = None  # (T, max_workers, D)
+    # in-flight messages returned to the queue head by worker failures
+    # (``fail_worker_at``) — the at-least-once accounting both backends
+    # expose so the fault-parity suite can compare them directly
+    requeued: int = 0
 
     @property
     def error(self) -> np.ndarray:
@@ -205,6 +209,7 @@ class SimCluster:
         self.requested_target = 0
         self.max_done_t = 0.0  # running max over completed messages
         self._failed: set = set()
+        self.requeued = 0  # messages bounced back to the head by failures
         # ---- multi-resource mode ------------------------------------------
         self._dims = tuple(config.resource_dims)
         self._multi = len(self._dims) > 1
@@ -395,6 +400,7 @@ class SimCluster:
                 if pe.msg is not None:
                     pe.msg.start_t = -1.0
                     self._push_front(pe.msg)
+                    self.requeued += 1
                 # purge from the indices: heap entries are skipped lazily
                 # once the state no longer matches.
                 self._idle.pop((w.idx, pe.uid), None)
@@ -756,4 +762,5 @@ def simulate(
         resource_dims=dims,
         measured_res=measured_res[:n].copy() if multi else None,
         scheduled_res=scheduled_res[:n].copy() if multi else None,
+        requeued=cluster.requeued,
     )

@@ -7,14 +7,26 @@ worker pool management and follows the same rules, so a packing run's
   - the target is advisory and capped at ``max_workers`` (the paper's
     5-VM SNIC quota) — ``requested_target`` keeps the uncapped ask so
     Fig. 10's "IRM keeps requesting beyond the cap" behavior is visible;
-  - scale-up reuses the lowest OFF slot before appending a new worker;
-    either way the worker boots with ``worker_boot_delay`` before it can
-    host PEs (placements on it fail and TTL-requeue meanwhile);
+  - scale-up reuses the lowest OFF slot before appending a new worker —
+    unless that slot belongs to a *failed* worker (the sim never reboots
+    a dead VM; the IRM routes around it instead); either way the worker
+    boots with ``worker_boot_delay`` before it can host PEs (placements
+    on it fail and TTL-requeue meanwhile);
   - scale-down deactivates only ACTIVE workers with *no* PEs, highest
     index first — PEs are never evicted, they idle out on their own.
+
+``Lifecycle.kill_worker`` is the live port of the sim's ``fail_worker_at``
+failure: the victim's PE tasks are cancelled, their in-flight messages
+harvested and requeued at the master's queue head (``Master.requeue``:
+negative-sequence front insert, at-least-once), and the slot is marked
+failed so scale-up never resurrects it.  Placements already targeting the
+dead worker fail ``try_start_pe`` and TTL-requeue through the container
+queue — the paper's V-B.2 recovery loop, unchanged.
 """
 
 from __future__ import annotations
+
+from typing import Set
 
 from ..core.sim import SimConfig, WorkerState
 from .clock import ScaledClock
@@ -31,12 +43,38 @@ class Lifecycle:
         self.cfg = cfg
         self.clock = clock
         self.requested_target = 0
+        self.failed: Set[int] = set()
+        # The control tick this actuator is executing in.  The driver sets
+        # it to the nominal tick time before each ``IRM.step`` — the same
+        # time base ``promote_booted`` runs on — so boot stamps and the
+        # anti-churn guard below can never disagree with boot promotion
+        # when the event loop falls behind wall clock (the real scaled
+        # clock may run ahead of the nominal tick under load).  The sim
+        # stamps ``ready_t`` with tick time for the same reason.
+        self.nominal_t = 0.0
+
+    def kill_worker(self, idx: int) -> int:
+        """Inject a worker failure; returns how many messages requeued.
+
+        Mirrors ``SimCluster._inject_failure``: in-flight messages bounce
+        back to the queue head one by one (the last PE's message ends up
+        globally first), the worker goes OFF, and its slot is excluded
+        from future scale-ups.  Idempotent: a second kill of the same
+        slot is a no-op, as in the sim.
+        """
+        if not 0 <= idx < len(self.pool.workers) or idx in self.failed:
+            return 0
+        harvested = self.pool.kill_worker(idx)
+        self.failed.add(idx)
+        for m in harvested:
+            self.pool.master.requeue(m)
+        return len(harvested)
 
     def scale_workers(self, target: int) -> None:
         self.requested_target = target
         cfg = self.cfg
         workers = self.pool.workers
-        t = self.clock.now()
+        t = self.nominal_t
         capped = min(target, cfg.max_workers)
         n_alive = sum(1 for w in workers if w.state is not WorkerState.OFF)
         # boot additional workers
@@ -44,7 +82,7 @@ class Lifecycle:
             slot = next(
                 (w for w in workers if w.state is WorkerState.OFF), None
             )
-            if slot is not None:
+            if slot is not None and slot.idx not in self.failed:
                 slot.state = WorkerState.BOOTING
                 slot.ready_t = t + cfg.worker_boot_delay
             else:
@@ -53,17 +91,22 @@ class Lifecycle:
                 )
             n_alive += 1
         # Deactivate empty workers above the target (highest index first).
-        # Live-only anti-churn guard: scale-down is deferred while any
-        # worker is still BOOTING.  Boot completions are asynchronous here,
-        # so a packing run can observe "5 alive, target 4" while four of
-        # the five are still initializing and the only ACTIVE worker is the
-        # empty one — deactivating it would park the whole pool behind a
-        # phantom bin (placements First-Fit into the OFF slot and fail
-        # until TTL death).  The tick-synchronized simulator cannot reach
-        # that interleaving, so this guard does not diverge from it on any
+        # Live-only anti-churn guard: scale-down is deferred while a boot
+        # is genuinely in flight (BOOTING and younger than the boot
+        # delay).  Boot completions are asynchronous here, so a packing
+        # run can observe "5 alive, target 4" while four of the five are
+        # still initializing and the only ACTIVE worker is the empty one —
+        # deactivating it would park the whole pool behind a phantom bin
+        # (placements First-Fit into the OFF slot and fail until TTL
+        # death).  The tick-synchronized simulator cannot reach that
+        # interleaving, so this guard does not diverge from it on any
         # pinned scenario; it only suppresses the live-concurrency race.
+        # The age check keeps the guard honest under failure injection: a
+        # BOOTING slot whose delay has already elapsed (a stale boot — it
+        # will be promoted or was orphaned by a kill) must not pin the
+        # pool at max size forever.
         if n_alive > capped and not any(
-            w.state is WorkerState.BOOTING for w in workers
+            w.state is WorkerState.BOOTING and t < w.ready_t for w in workers
         ):
             for w in reversed(workers):
                 if n_alive <= capped:

@@ -13,7 +13,10 @@ event loop:
     decisions, with the configured boot/start delays;
   - a control-loop task steps the *unmodified* ``IRM`` once per ``dt``
     against a ``LiveCluster`` view and records a ``SimResult``-compatible
-    trace (``TraceRecorder``).
+    trace (``TraceRecorder``), and injects ``SimConfig.fail_worker_at``
+    worker failures at their nominal tick exactly like the simulator
+    (``Lifecycle.kill_worker``: PE tasks cancelled, in-flight messages
+    requeued at the queue head, at-least-once).
 
 Time: everything is expressed in scenario seconds; ``RuntimeConfig.
 time_scale`` sets how many wall seconds one scenario second costs (see
@@ -142,12 +145,18 @@ class LiveCluster:
         return out
 
     def backlog_resource_demand(self) -> Optional[Resources]:
+        # The ROADMAP's decision-latency budget item: read the master's
+        # incremental per-image counters (O(images)) instead of walking
+        # the backlog head message by message — one estimate lookup and
+        # one vector op per image class, not per queued message.  The
+        # 64-message cap matches the sim's scan so the predictor sees the
+        # same demand signal on both backends.
         if not self._multi:
             return None
         est = self.irm.profiler.estimate
         total: Optional[Resources] = None
-        for msg in self.master.backlog_head(64):
-            v = est(msg.image)
+        for img, cnt in self.master.backlog_image_counts(64):
+            v = est(img) * cnt
             total = v if total is None else total + v
         return total
 
@@ -212,8 +221,17 @@ async def _drive(
         t = 0.0
         last_report_t = -1e9
         stall_since: Optional[float] = None
+        fail_at = cfg.fail_worker_at
         while t <= cfg.t_max:
             await clock.sleep_until(t)
+            # fault injection precedes boot promotion, as in the sim's
+            # tick; the hook re-arms each tick until the victim slot
+            # exists (the sim retries the same way for a late worker)
+            lifecycle.nominal_t = t
+            if fail_at is not None and t >= fail_at[1] \
+                    and fail_at[0] < len(pool.workers):
+                lifecycle.kill_worker(fail_at[0])
+                fail_at = None
             pool.promote_booted(t)
             measured_cpu, dim_measure = measure_workers(
                 pool.workers, cfg, rng, dims
@@ -282,6 +300,7 @@ async def _drive(
         total=total,
         makespan=master.max_done_t,
         messages=[m for _, b in stream.batches for m in b],
+        requeued=master.requeued,
     )
 
 

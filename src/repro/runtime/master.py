@@ -12,7 +12,10 @@ semantics) — so backlog observations (`queue_length`, `queue_image_mix`,
 Handoff is pull-based: PEs call ``pull`` (synchronous, single-threaded on
 the event loop, so no locks) and park on a per-image ``asyncio.Event``
 while their queue is empty.  Completion tracking lives here too: the
-driver awaits ``drained`` instead of polling.
+driver awaits ``drained`` instead of polling.  A pulled message is *in
+flight* until it is either completed or requeued (worker failure) — the
+drain check requires that count to hit zero, so a backlog that happens to
+be empty while PEs still hold messages can never end the run early.
 """
 
 from __future__ import annotations
@@ -42,6 +45,10 @@ class Master:
         self.max_done_t = 0.0
         self.arrivals_closed = False
         self.drained = asyncio.Event()
+        # messages pulled by a PE but neither completed nor requeued yet
+        self.in_flight = 0
+        # messages harvested from failed workers and re-inserted at the head
+        self.requeued = 0
 
     # ---- enqueue ----------------------------------------------------------
     def _event(self, image: str) -> asyncio.Event:
@@ -70,6 +77,19 @@ class Master:
         self._qlen += 1
         self._event(m.image).set()
 
+    def requeue(self, m: Message) -> None:
+        """Return an in-flight message to the queue head (worker failure).
+
+        The simulator's at-least-once path: the message loses its start
+        stamp, re-enters at the head with a decreasing negative sequence
+        number, and stops counting as in flight.  ``requeued`` keeps the
+        accounting the fault-parity suite compares across backends.
+        """
+        m.start_t = -1.0
+        self.push_front(m)
+        self.in_flight -= 1
+        self.requeued += 1
+
     def close_arrivals(self) -> None:
         """No further pushes will come; enables drain detection."""
         self.arrivals_closed = True
@@ -79,19 +99,22 @@ class Master:
     def queue_length(self) -> float:
         return float(self._qlen)
 
-    def queue_image_mix(self) -> Dict[str, float]:
-        # insertion order follows each image's first occurrence in global
-        # FIFO order (deque-head sequence number) — the IRM's apportionment
-        # breaks ties by this order, same as the sim backend.
-        if self._qlen == 0:
-            return {}
-        heads = sorted(
+    def _image_heads(self) -> List[Tuple[int, str, int]]:
+        """(head seq, image, queued count) per non-empty image queue,
+        sorted by each image's first occurrence in global FIFO order —
+        the IRM's apportionment breaks ties by this order, same as the
+        sim backend."""
+        return sorted(
             (dq[0][0], img, len(dq))
             for img, dq in self._img_queues.items()
             if dq
         )
+
+    def queue_image_mix(self) -> Dict[str, float]:
+        if self._qlen == 0:
+            return {}
         n = float(self._qlen)
-        return {img: cnt / n for _, img, cnt in heads}
+        return {img: cnt / n for _, img, cnt in self._image_heads()}
 
     def backlog_head(self, k: int) -> List[Message]:
         """The first ``k`` queued messages in global FIFO order."""
@@ -101,6 +124,26 @@ class Master:
         if len(live) == 1:
             return [m for _, m in islice(live[0], k)]
         return [m for _, m in islice(heapq.merge(*live), k)]
+
+    def backlog_image_counts(self, k: int) -> List[Tuple[str, int]]:
+        """Per-image counts of the first ``min(k, len)`` backlog messages.
+
+        Ordered by each image's first occurrence in global FIFO order (the
+        same insertion order as ``queue_image_mix``).  While the whole
+        backlog fits in ``k`` — the steady-state case — the per-image
+        deque lengths (maintained O(1) by every push/pull/requeue) answer
+        directly, O(images) instead of a k-message scan; only a deeper
+        backlog walks sequence numbers, and even then no per-message
+        estimate lookups happen downstream.
+        """
+        if self._qlen == 0 or k <= 0:
+            return []
+        if self._qlen <= k:
+            return [(img, cnt) for _, img, cnt in self._image_heads()]
+        counts: Dict[str, int] = {}
+        for m in self.backlog_head(k):
+            counts[m.image] = counts.get(m.image, 0) + 1
+        return list(counts.items())
 
     # ---- P2P handoff ------------------------------------------------------
     def head(self, image: str) -> Optional[Message]:
@@ -115,6 +158,7 @@ class Master:
             return None
         _, m = dq.popleft()
         self._qlen -= 1
+        self.in_flight += 1
         if not dq:
             self._event(image).clear()
         return m
@@ -130,14 +174,21 @@ class Master:
     # ---- completion -------------------------------------------------------
     def complete(self, msg: Message) -> None:
         self.completed.append(msg)
+        self.in_flight -= 1
         if msg.done_t > self.max_done_t:
             self.max_done_t = msg.done_t
         self._check_drained()
 
     def _check_drained(self) -> None:
+        # ``in_flight == 0`` is load-bearing: with ``total_expected``
+        # unset (0) the completed-count condition is vacuously true, and
+        # an empty backlog alone does not mean the work is done — pulled
+        # messages live at PEs (or, during a worker kill, briefly in the
+        # harvester's hands) without being queued anywhere.
         if (
             self.arrivals_closed
             and self._qlen == 0
+            and self.in_flight == 0
             and len(self.completed) >= self.total_expected
         ):
             self.drained.set()

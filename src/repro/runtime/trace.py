@@ -215,6 +215,7 @@ class TraceRecorder:
         total: int,
         makespan: float,
         messages: List[Message],
+        requeued: int = 0,
     ) -> SimResult:
         n = len(self.times)
         W = self.cfg.max_workers
@@ -242,4 +243,5 @@ class TraceRecorder:
             scheduled_res=(
                 np.stack(self.scheduled_res) if self.multi and n else None
             ),
+            requeued=requeued,
         )

@@ -121,6 +121,32 @@ class WorkerPool:
     def pe_count(self) -> int:
         return sum(len(w.pes) for w in self.workers)
 
+    def kill_worker(self, idx: int) -> List[Message]:
+        """Abruptly terminate a worker: cancel its PE tasks, harvest the
+        messages they were processing.
+
+        The task-level mechanics of the sim's ``fail_worker_at`` failure:
+        everything here mutates synchronously on the event-loop thread, so
+        a BUSY PE is either still awaiting its payload (the cancellation
+        lands there; its ``finally`` runs later against an already-emptied
+        worker) or has already run its completion bookkeeping — a
+        harvested message can never also complete.  Harvest order is PE
+        order, matching the sim's one-by-one ``insert(0, m)`` sequence, so
+        the last PE's message ends up globally first once requeued.
+        """
+        w = self.workers[idx]
+        harvested: List[Message] = []
+        for pe in list(w.pes):
+            if pe.msg is not None:
+                harvested.append(pe.msg)
+                pe.msg = None
+            pe.state = PEState.STOPPED
+            if pe.task is not None and not pe.task.done():
+                pe.task.cancel()
+        w.pes = []
+        w.state = WorkerState.OFF
+        return harvested
+
     # ---- placement actuation ----------------------------------------------
     def try_start_pe(self, req: HostRequest) -> bool:
         """Start a PE on the placed worker; False while the VM still boots."""

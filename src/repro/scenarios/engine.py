@@ -109,6 +109,7 @@ def summarize_result(res: SimResult, dt: float) -> Dict[str, float]:
         "max_target_workers": int(res.target_workers.max()),
         "peak_queue_len": int(res.queue_len.max()),
         "peak_pe_count": int(res.pe_count.max()),
+        "requeued": int(res.requeued),
     }
     if res.scheduled_res is not None:
         # per-dimension mean scheduled utilization over active cells
@@ -133,6 +134,7 @@ def run_scenario(
     irm: Optional[IRM] = None,
     backend: str = "sim",
     runtime: Optional[object] = None,
+    sim_overrides: Optional[Dict[str, object]] = None,
 ) -> ScenarioResult:
     """Run a scenario end to end and evaluate its expectations.
 
@@ -142,6 +144,9 @@ def run_scenario(
     ``base_seed + i``, reusing one IRM so the profiler state persists across
     runs exactly as in the paper's repeated-run experiment.  ``t_max`` and
     ``stream_overrides`` shrink or grow the experiment (smoke runs, sweeps).
+    ``sim_overrides`` replaces fields on the scenario's ``SimConfig`` —
+    e.g. ``{"fail_worker_at": (0, 25.0)}`` injects a worker failure, which
+    both the sim and live backends honor identically.
 
     ``backend`` selects the execution engine: ``"sim"`` (discrete-event,
     deterministic) or ``"live"`` (the asyncio master/worker runtime; pass a
@@ -174,6 +179,8 @@ def run_scenario(
     sim_cfg = scn.sim_config()
     if t_max is not None:
         sim_cfg = dataclasses.replace(sim_cfg, t_max=float(t_max))
+    if sim_overrides:
+        sim_cfg = dataclasses.replace(sim_cfg, **sim_overrides)
 
     if backend == "live":
         from ..runtime.live import run_live
@@ -234,6 +241,7 @@ def sweep_policies(
     t_max: Optional[float] = None,
     backend: str = "sim",
     runtime: Optional[object] = None,
+    sim_overrides: Optional[Dict[str, object]] = None,
 ) -> Dict[str, ScenarioResult]:
     """Run one scenario under every policy, one process per policy.
 
@@ -253,7 +261,8 @@ def sweep_policies(
         make_packer(p)  # validate every name before spawning workers
     kwargs = dict(base_seed=base_seed, n_runs=n_runs,
                   stream_overrides=stream_overrides, t_max=t_max,
-                  backend=backend, runtime=runtime)
+                  backend=backend, runtime=runtime,
+                  sim_overrides=sim_overrides)
 
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     try:

@@ -146,6 +146,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--payload", default="sleep",
                     choices=tuple(sorted(PAYLOADS)),
                     help="live backend: per-message PE payload")
+    ap.add_argument("--fail-worker", default=None, metavar="IDX:T",
+                    help="inject a worker failure: kill worker IDX at "
+                    "scenario time T seconds (sim and live backends; "
+                    "in-flight messages requeue at the head, at-least-once)")
     ap.add_argument("--seed", type=int, default=0, help="base stream seed")
     ap.add_argument("--runs", type=int, default=None,
                     help="override the scenario's run count")
@@ -186,6 +190,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         from .serving import run_serving_scenario
 
         for flag, value in (("--policy", args.policy), ("--runs", args.runs),
+                            ("--fail-worker", args.fail_worker),
                             ("--check", args.check or None)):
             if value is not None:
                 print(f"note: {flag} does not apply to the serving backend "
@@ -226,9 +231,22 @@ def main(argv: Optional[List[str]] = None) -> int:
     else:
         policies = [p.strip() for p in args.policy.split(",") if p.strip()]
 
+    sim_overrides = None
+    if args.fail_worker is not None:
+        try:
+            idx_s, _, t_s = args.fail_worker.partition(":")
+            idx, when = int(idx_s), float(t_s)
+            if idx < 0:
+                raise ValueError(idx)
+            sim_overrides = {"fail_worker_at": (idx, when)}
+        except ValueError:
+            print(f"error: --fail-worker expects IDX:T with IDX >= 0, got "
+                  f"{args.fail_worker!r}", file=sys.stderr)
+            return 2
+
     run_kwargs = dict(base_seed=args.seed, n_runs=n_runs,
                       stream_overrides=stream_overrides, t_max=t_max,
-                      backend=args.backend)
+                      backend=args.backend, sim_overrides=sim_overrides)
     if args.backend == "live":
         from ..runtime.live import RuntimeConfig
 

@@ -5,9 +5,13 @@ scenarios as real concurrent asyncio work in scaled wall-clock time.  The
 two can never be bit-identical — that divergence under real concurrency is
 the point of having a live backend — but the *scheduling behavior* the
 paper measures must land in the same place: utilization of the workers the
-IRM opens, and how many workers it targets.  These tests pin that, for a
-scalar policy on the paper's scenarios and a vector policy on the
-multi-resource one.
+IRM opens, and how many workers it targets.  These tests pin that for a
+scalar policy on the paper's scenarios, for a vector policy on the
+multi-resource ones (including the rigid accelerator gate under concurrent
+pulls), for the event-driven arrival races of the bursty shape, and for
+the fault model: a worker killed mid-run must requeue its in-flight
+messages and still complete the stream on both backends, with identical
+requeue accounting.
 
 Tolerances are deliberately wide bands, not equalities: they catch the
 failure modes we actually saw while building the backend (phantom-bin
@@ -26,7 +30,7 @@ from repro.scenarios.registry import get_scenario
 FAST = RuntimeConfig(time_scale=0.01)
 
 
-def _pair(name: str, policy: str, seed: int = 0):
+def _pair(name: str, policy: str, seed: int = 0, sim_overrides=None):
     scn = get_scenario(name)
     kwargs = dict(
         policy=policy,
@@ -34,6 +38,7 @@ def _pair(name: str, policy: str, seed: int = 0):
         n_runs=1,
         stream_overrides=scn.smoke_overrides,
         t_max=scn.smoke_t_max,
+        sim_overrides=sim_overrides,
     )
     sim = run_scenario(name, backend="sim", **kwargs)
     live = run_scenario(name, backend="live", runtime=FAST, **kwargs)
@@ -89,3 +94,64 @@ def test_live_matches_sim_vector_policy():
     assert live.summary["bottleneck_dim"] == sim.summary["bottleneck_dim"]
     for res in (live.final, sim.final):
         assert (res.scheduled_res <= 1.0 + 1e-9).all()
+
+
+@pytest.mark.timeout(180)
+def test_live_matches_sim_bursty_first_fit():
+    """Event-driven arrival races: bursts land on the live master from a
+    real feeder task, not a tick boundary — the adversarial case for the
+    queue-ROC predictor on both backends."""
+    sim, live = _pair("bursty", "first-fit")
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)
+    # both see the bursts as genuine backlog spikes
+    assert sim.summary["peak_queue_len"] >= 8
+    assert live.summary["peak_queue_len"] >= 8
+
+
+@pytest.mark.timeout(180)
+def test_live_matches_sim_mixed_accel_vector():
+    """The rigid accelerator gate under concurrent pulls: complementary
+    CPU/accel tenants must co-locate without overcommitting either
+    dimension on either backend."""
+    sim, live = _pair("mixed-accel", "vector-first-fit")
+    _assert_parity(sim, live, util_tol=0.2, target_tol=3,
+                   makespan_ratio=1.8)
+    assert live.summary["bottleneck_dim"] == sim.summary["bottleneck_dim"]
+    for res in (live.final, sim.final):
+        assert (res.scheduled_res <= 1.0 + 1e-9).all()
+
+
+@pytest.mark.timeout(180)
+def test_fault_parity_worker_kill_mid_run():
+    """The paper's V-B.2 fault-tolerance claim, pinned across backends: a
+    worker killed mid-run loses its in-flight messages back to the queue
+    head (TTL requeue, at-least-once), and *both* backends still complete
+    the entire stream — with identical requeue accounting.
+
+    The kill lands at t=20.5, the midpoint of the schedule's largest
+    start/done-free window (no message event within ±2.0 scenario
+    seconds), and this test runs at a slower time scale than the rest of
+    the suite (1 scenario second = 50 ms wall), so the in-flight set at
+    the kill — and therefore the requeue count — tolerates ~100 ms of
+    event-loop jitter before it could change.  That makes the *exact*
+    count equality below safe to assert on a loaded CI runner."""
+    scn = get_scenario("microscopy")
+    kwargs = dict(
+        policy="first-fit", base_seed=0, n_runs=1,
+        stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
+        sim_overrides={"fail_worker_at": (0, 20.5)},
+    )
+    sim = run_scenario("microscopy", backend="sim", **kwargs)
+    live = run_scenario("microscopy", backend="live",
+                        runtime=RuntimeConfig(time_scale=0.05), **kwargs)
+    # at-least-once: every message completes despite the kill
+    assert sim.summary["completed"] == sim.summary["total"]
+    assert live.summary["completed"] == live.summary["total"]
+    # the kill actually caught in-flight work, and the two fault models
+    # harvested exactly the same messages
+    assert sim.final.requeued > 0
+    assert live.final.requeued == sim.final.requeued
+    # scheduling behavior stays inside the standard parity bands
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)

@@ -147,6 +147,113 @@ def test_master_drain_event_requires_closed_arrivals():
 
 
 @pytest.mark.timeout(30)
+def test_master_drain_waits_for_in_flight_messages():
+    """Regression: with ``total_expected`` unset the completed-count check
+    is vacuous, and an empty backlog used to flip ``drained`` while pulled
+    messages were still processing at PEs."""
+
+    async def go():
+        master = Master()  # total_expected unset (0)
+        m = Message(image="a", duration=1.0)
+        master.push_back(m)
+        assert master.pull("a") is m  # now in flight at a PE
+        assert master.in_flight == 1
+        master.close_arrivals()
+        assert not master.drained.is_set()  # queue empty but work pending
+        m.done_t = 1.0
+        master.complete(m)
+        assert master.in_flight == 0
+        assert master.drained.is_set()
+        return True
+
+    assert asyncio.run(go())
+
+
+@pytest.mark.timeout(30)
+def test_master_requeue_reinserts_at_head_with_accounting():
+    """A failure requeue returns the in-flight message to the global FIFO
+    head, clears its start stamp, and keeps the at-least-once counters."""
+
+    async def go():
+        master = Master(total_expected=2)
+        a1 = Message(image="a", duration=1.0)
+        a2 = Message(image="a", duration=1.0)
+        master.push_back(a1)
+        master.push_back(a2)
+        pulled = master.pull("a")
+        assert pulled is a1
+        pulled.start_t = 5.0
+        master.requeue(pulled)  # its worker died
+        assert pulled.start_t == -1.0
+        assert master.in_flight == 0
+        assert master.requeued == 1
+        # head re-insert: the requeued message beats the older a2
+        assert master.backlog_head(2) == [a1, a2]
+        master.close_arrivals()
+        assert not master.drained.is_set()  # nothing is done yet
+        for _ in range(2):
+            m = master.pull("a")
+            m.done_t = 1.0
+            master.complete(m)
+        assert master.drained.is_set()
+        return True
+
+    assert asyncio.run(go())
+
+
+@pytest.mark.timeout(30)
+def test_backlog_demand_accumulator_matches_scan():
+    """The incremental per-image counters must reproduce the sim's
+    64-message head scan exactly — shallow and deep backlogs, after
+    interleaved pulls and front requeues."""
+    import numpy as np
+
+    from repro.core.irm import IRM, IRMConfig
+    from repro.core.sim import SimConfig
+    from repro.runtime.live import LiveCluster
+
+    async def go():
+        cfg = SimConfig(resource_dims=("cpu", "mem"))
+        irm = IRM(IRMConfig())
+        master = Master()
+        cluster = LiveCluster(cfg, irm, master, pool=None, lifecycle=None)
+        est = irm.profiler.estimate
+
+        def scan_demand():
+            total = None
+            for msg in master.backlog_head(64):
+                v = est(msg.image)
+                total = v if total is None else total + v
+            return total
+
+        rng = np.random.default_rng(3)
+        images = ["a", "b", "c", "d"]
+        assert cluster.backlog_resource_demand() is None  # empty backlog
+        for step in range(400):
+            op = rng.integers(0, 4)
+            img = images[int(rng.integers(0, len(images)))]
+            if op <= 1:  # bias toward pushes so the backlog exceeds 64
+                master.push_back(Message(image=img, duration=1.0))
+            elif op == 2:
+                master.push_front(Message(image=img, duration=1.0))
+            elif master.queue_length() > 0:
+                head_img = master.backlog_head(1)[0].image
+                master.requeue(master.pull(head_img))
+                master.pull(head_img)
+            fast, slow = cluster.backlog_resource_demand(), scan_demand()
+            assert (fast is None) == (slow is None)
+            if fast is not None:
+                assert fast.dims == slow.dims
+                np.testing.assert_allclose(
+                    fast.values, slow.values, rtol=1e-12, atol=1e-12
+                )
+        assert master.queue_length() > 64  # the deep-backlog path was hit
+        return True
+
+    assert asyncio.run(go())
+
+
+@pytest.mark.timeout(30)
 def test_pe_idles_out_and_worker_hosts_while_active():
     """A placed PE starts, drains its queue, then self-terminates."""
 
@@ -239,6 +346,102 @@ def test_lifecycle_defers_scale_down_while_booting():
             WorkerState.ACTIVE, WorkerState.ACTIVE, WorkerState.OFF,
             WorkerState.OFF, WorkerState.OFF,
         ]
+        return True
+
+    assert asyncio.run(go())
+
+
+@pytest.mark.timeout(30)
+def test_lifecycle_stale_boot_does_not_block_scale_down():
+    """Regression: the anti-churn guard is scoped to boots younger than
+    ``worker_boot_delay``.  A stale BOOTING slot (its delay already
+    elapsed — e.g. orphaned by a failure-driven kill/reboot cycle) must
+    not pin the pool at max size forever."""
+
+    async def go():
+        from repro.runtime.lifecycle import Lifecycle
+        from repro.runtime.worker import WorkerPool
+
+        cfg = SimConfig(worker_boot_delay=5.0, max_workers=5)
+        clock = ScaledClock(time_scale=0.001)
+        pool = WorkerPool(cfg, Master(), clock, SleepPayload(),
+                          poll_interval=cfg.dt)
+        lifecycle = Lifecycle(pool, cfg, clock)
+        clock.start()
+        lifecycle.scale_workers(3)
+        for w in pool.workers[:2]:
+            w.state = WorkerState.ACTIVE
+        # worker 2 stays BOOTING with its ready time already in the past —
+        # the stale state the scoped guard must see through
+        pool.workers[2].ready_t = clock.now() - 1.0
+        lifecycle.scale_workers(2)
+        assert [w.state for w in pool.workers] == [
+            WorkerState.ACTIVE, WorkerState.OFF, WorkerState.BOOTING,
+        ]
+        # a boot genuinely in flight still defers the scale-down
+        pool.workers[2].ready_t = clock.now() + cfg.worker_boot_delay
+        pool.workers[1].state = WorkerState.ACTIVE
+        lifecycle.scale_workers(2)
+        assert pool.workers[1].state is WorkerState.ACTIVE
+        return True
+
+    assert asyncio.run(go())
+
+
+@pytest.mark.timeout(30)
+def test_lifecycle_kill_worker_requeues_in_flight_at_head():
+    """The live fault path: the victim's PE tasks are cancelled, their
+    in-flight messages re-enter the master queue head (last PE first),
+    and the failed slot is never rebooted by later scale-ups."""
+
+    async def go():
+        from repro.runtime.lifecycle import Lifecycle
+        from repro.runtime.worker import WorkerPool
+
+        cfg = SimConfig(pe_start_delay=0.5, container_idle_timeout=30.0,
+                        worker_boot_delay=0.0, max_workers=5)
+        clock = ScaledClock(time_scale=0.005)
+        master = Master(total_expected=3)
+        pool = WorkerPool(cfg, master, clock, SleepPayload(),
+                          poll_interval=cfg.dt)
+        lifecycle = Lifecycle(pool, cfg, clock)
+        clock.start()
+        lifecycle.scale_workers(2)
+        m1 = Message(image="img", duration=50.0)
+        m2 = Message(image="img", duration=50.0)
+        m3 = Message(image="img", duration=50.0)
+        for m in (m1, m2, m3):
+            master.push_back(m)
+        for _ in range(2):
+            assert pool.try_start_pe(
+                HostRequest(image="img", size_estimate=0.2, target_worker=0)
+            )
+        w = pool.workers[0]
+        # let both PEs start and pull their messages
+        while not (len(w.pes) == 2 and all(pe.msg for pe in w.pes)):
+            await clock.sleep(0.5)
+        assert master.in_flight == 2
+        tasks = [pe.task for pe in w.pes]
+        victims = [pe.msg for pe in w.pes]
+
+        requeued = lifecycle.kill_worker(0)
+        assert requeued == 2
+        assert w.state is WorkerState.OFF and not w.pes
+        assert master.requeued == 2 and master.in_flight == 0
+        # insert(0, m) one by one: the last PE's message is globally first
+        assert master.backlog_head(3) == [victims[1], victims[0], m3]
+        assert all(m.start_t == -1.0 for m in victims)
+        await asyncio.gather(*tasks, return_exceptions=True)
+        # _pe_main absorbs the CancelledError; done-and-no-complete is the
+        # observable contract (the harvested messages never completed)
+        assert all(t.done() for t in tasks) and not master.completed
+        # killing again is a no-op, and the dead slot is never rebooted
+        assert lifecycle.kill_worker(0) == 0
+        lifecycle.scale_workers(3)
+        assert w.state is WorkerState.OFF
+        # fresh slots were appended instead of resurrecting the dead one
+        assert len(pool.workers) == 4
+        assert all(x.state is not WorkerState.OFF for x in pool.workers[2:])
         return True
 
     assert asyncio.run(go())
