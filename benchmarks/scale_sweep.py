@@ -1,0 +1,243 @@
+"""Fleet-scale control-plane sweep: IRM decision latency vs worker count.
+
+The paper's IRM makes one online bin-packing decision per tick; this bench
+measures what that decision costs as the fleet grows, driving the real
+``IRM.step`` loop against a synthetic ndarray-backed cluster view (no sim,
+no asyncio — control plane only) at workers ∈ {10², 10³, 10⁴} with message
+backlogs up to 10⁶.  Per size it reports wall-clock percentiles for the
+full ``IRM.step`` and for the packing engine alone, plus the incremental
+repacker's path counters.
+
+The fleet view hands the allocator its per-worker loads as one float64
+array (the numpy-engine fast path) and churns a small random fraction of
+workers per tick — completions and new placements — so the incremental
+repacker sees realistic dirty sets rather than a frozen fleet.
+
+Writes ``BENCH_scale.json``:
+
+    {
+      "schema": "BENCH_scale/v1",
+      "smoke": false,
+      "algorithm": "first-fit",
+      "engine": "numpy",
+      "ticks": 200,
+      "sizes": {
+        "100":   {"workers": 100, "backlog": 10000,
+                  "irm_step_ms": {"mean": ..., "p50": ..., "p95": ..., "p99": ...},
+                  "packer_ms":   {"mean": ..., "p50": ..., "p95": ..., "p99": ...},
+                  "placements": ..., "full_repacks": ..., "incremental_runs": ...},
+        "1000":  {...}, "10000": {...}
+      },
+      "scaling": {"p99_ratio_10k_vs_100": ..., "sublinear_ok": true},
+      "meta": {...}
+    }
+
+``--smoke`` runs only the 10²-worker point (the CI invocation).  On a full
+sweep the script exits nonzero when ``IRM.step`` p99 at 10⁴ workers is not
+below 10× the p99 at 10² — the sub-linear scaling contract the numpy
+engine + incremental repack exist to provide.
+
+Usage:
+    PYTHONPATH=src python benchmarks/scale_sweep.py [--smoke] \
+        [--ticks 200] [--algorithm first-fit] [--out BENCH_scale.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import IRM, IRMConfig
+from repro.core.allocator import AllocatorConfig
+from repro.core.binpack import NumpyPacker
+from repro.core.queues import HostRequest
+
+SIZES = (100, 1_000, 10_000)
+BACKLOG_PER_WORKER = 100  # 10^4 workers -> 10^6-message backlog
+SUBLINEAR_MAX_RATIO = 10.0
+
+
+class SyntheticFleetView:
+    """ClusterView over an ndarray fleet: loads as one (n,) float64 array.
+
+    ``worker_scheduled_loads`` returns the array itself, which routes the
+    allocator onto the numpy engine; placements and per-tick churn mutate
+    a bounded random subset of rows so the incremental repacker's dirty
+    tracking is exercised the way a live fleet would.
+    """
+
+    def __init__(self, n_workers: int, backlog: int,
+                 rng: np.random.Generator):
+        self.n = n_workers
+        self.backlog = float(backlog)
+        self.loads = rng.uniform(0.0, 0.85, size=n_workers)
+        self.requested_target = 0
+        self.started = 0
+
+    # -- observation ---------------------------------------------------------
+    def queue_length(self) -> float:
+        return self.backlog
+
+    def queue_image_mix(self) -> Dict[str, float]:
+        return {"img": 1.0}
+
+    def worker_scheduled_loads(self) -> np.ndarray:
+        return self.loads
+
+    def backlog_resource_demand(self):
+        return None
+
+    # -- actuation -----------------------------------------------------------
+    def try_start_pe(self, req: HostRequest) -> bool:
+        idx = req.target_worker
+        if idx is None or idx >= self.n:
+            return False  # placement onto a not-yet-booted slot
+        est = float(req.size_estimate)
+        self.loads[idx] = min(self.loads[idx] + est, 1.0)
+        self.started += 1
+        return True
+
+    def scale_workers(self, target: int) -> None:
+        self.requested_target = target  # fleet size is fixed per sweep point
+
+    # -- synthetic dynamics --------------------------------------------------
+    def churn(self, rng: np.random.Generator) -> None:
+        """Completions: ~1% of workers (at least one) shed some load."""
+        k = max(1, self.n // 100)
+        rows = rng.integers(0, self.n, size=k)
+        self.loads[rows] = np.maximum(
+            self.loads[rows] - rng.uniform(0.1, 0.5, size=k), 0.0
+        )
+
+
+def _percentiles(samples: List[float]) -> Dict[str, float]:
+    arr = np.asarray(samples)
+    return {
+        "mean": float(arr.mean()),
+        "p50": float(np.percentile(arr, 50)),
+        "p95": float(np.percentile(arr, 95)),
+        "p99": float(np.percentile(arr, 99)),
+    }
+
+
+def bench_packer_only(loads: np.ndarray, algorithm: str,
+                      rng: np.random.Generator, reps: int) -> Dict[str, float]:
+    """Latency of one packing decision alone: build the engine over the
+    fleet's prefill and place one drained batch (8 items, the predictor's
+    per-decision cap) — the exact work ``BinPackingManager.run`` delegates."""
+    sizes = rng.uniform(0.05, 0.6, size=8)
+    prefill = np.minimum(loads, 1.0)
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        packer = NumpyPacker(algorithm, capacity=1.0, used=prefill)
+        packer.place_batch(sizes)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    return _percentiles(lat)
+
+
+def bench_size(n_workers: int, *, ticks: int, algorithm: str,
+               seed: int = 0) -> Dict[str, object]:
+    rng = np.random.default_rng(seed)
+    irm_cfg = IRMConfig()
+    irm_cfg.allocator = AllocatorConfig(
+        algorithm=algorithm, engine="numpy", incremental=True,
+        pack_interval=0.0,  # pack on every tick: every step pays a decision
+    )
+    irm = IRM(irm_cfg)
+    backlog = BACKLOG_PER_WORKER * n_workers
+    view = SyntheticFleetView(n_workers, backlog, rng)
+    step_ms: List[float] = []
+    for i in range(ticks):
+        view.churn(rng)
+        t0 = time.perf_counter()
+        irm.step(float(i), view)
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+    mgr = irm.packing_manager
+    return {
+        "workers": n_workers,
+        "backlog": backlog,
+        "irm_step_ms": _percentiles(step_ms),
+        "packer_ms": bench_packer_only(view.loads, algorithm, rng,
+                                       reps=min(ticks, 100)),
+        "placements": view.started,
+        "full_repacks": mgr.full_repacks,
+        "incremental_runs": mgr.incremental_runs,
+    }
+
+
+def run(out: str = "BENCH_scale.json", *, smoke: bool = False,
+        ticks: int = 200, algorithm: str = "first-fit") -> dict:
+    sizes = SIZES[:1] if smoke else SIZES
+    payload = {
+        "schema": "BENCH_scale/v1",
+        "smoke": bool(smoke),
+        "algorithm": algorithm,
+        "engine": "numpy",
+        "ticks": ticks,
+        "sizes": {},
+    }
+    for n in sizes:
+        print(f"[scale_sweep] workers={n} ...", flush=True)
+        payload["sizes"][str(n)] = bench_size(n, ticks=ticks,
+                                              algorithm=algorithm)
+        r = payload["sizes"][str(n)]
+        print(
+            f"[scale_sweep]   irm.step p50={r['irm_step_ms']['p50']:.3f}ms "
+            f"p99={r['irm_step_ms']['p99']:.3f}ms  "
+            f"packer p99={r['packer_ms']['p99']:.3f}ms  "
+            f"incremental={r['incremental_runs']}/{ticks}",
+            flush=True,
+        )
+    if not smoke and "100" in payload["sizes"] and "10000" in payload["sizes"]:
+        small = payload["sizes"]["100"]["irm_step_ms"]["p99"]
+        big = payload["sizes"]["10000"]["irm_step_ms"]["p99"]
+        ratio = big / max(small, 1e-9)
+        payload["scaling"] = {
+            "p99_ratio_10k_vs_100": ratio,
+            "sublinear_ok": bool(ratio < SUBLINEAR_MAX_RATIO),
+        }
+        print(f"[scale_sweep] p99(10^4)/p99(10^2) = {ratio:.2f}x "
+              f"(contract: < {SUBLINEAR_MAX_RATIO:.0f}x)", flush=True)
+    payload["meta"] = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "numpy": np.__version__,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[scale_sweep] wrote {out}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="IRM decision-latency sweep over fleet sizes"
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the 100-worker point (CI)")
+    ap.add_argument("--ticks", type=int, default=200,
+                    help="IRM steps timed per fleet size (default 200)")
+    ap.add_argument("--algorithm", default="first-fit",
+                    help="packing policy under test (default first-fit)")
+    ap.add_argument("--out", default="BENCH_scale.json",
+                    help="output JSON path (default: ./BENCH_scale.json)")
+    args = ap.parse_args(argv)
+    payload = run(args.out, smoke=args.smoke, ticks=args.ticks,
+                  algorithm=args.algorithm)
+    scaling = payload.get("scaling")
+    if scaling is not None and not scaling["sublinear_ok"]:
+        print("[scale_sweep] FAIL: decision cost is not sub-linear",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,8 +24,11 @@ from typing import List, Optional, Sequence, Union
 import numpy as np
 
 from .binpack import (
+    _EPS,
+    NUMPY_BIN_THRESHOLD,
     Bin,
     Item,
+    NumpyPacker,
     VectorBin,
     VectorItem,
     is_vector_policy,
@@ -65,6 +68,22 @@ class AllocatorConfig:
     # Optional per-worker headroom so measurement noise does not congest a
     # worker scheduled at exactly 100% (0.0 == faithful paper behaviour).
     headroom: float = 0.0
+    # Packing engine: "object" (per-bin Python packers), "numpy" (the
+    # array-backed ``NumpyPacker`` — required for ndarray worker loads), or
+    # "auto" (numpy once the fleet reaches ``numpy_bin_threshold`` bins or
+    # the loads arrive as an ndarray).  Both engines make identical
+    # placement decisions (``tests/test_packer_equivalence.py``).
+    engine: str = "auto"
+    numpy_bin_threshold: int = NUMPY_BIN_THRESHOLD
+    # Incremental repacking (numpy engine only): keep the pre-fill matrix
+    # from the previous run and refresh only *dirty* rows — workers whose
+    # reported load changed since the last decision, rows beyond the old
+    # fleet size, and the previous run's placement frontier.  Decisions are
+    # provably equal to a full repack (the pre-fill of a bin depends only on
+    # its own load); when the dirty fraction exceeds ``dirty_fallback`` the
+    # whole matrix is rebuilt instead.
+    incremental: bool = True
+    dirty_fallback: float = 0.25
 
 
 @dataclasses.dataclass
@@ -72,8 +91,11 @@ class PackingRun:
     """Result of one periodic bin-packing run.
 
     ``scheduled_load`` entries are floats on the scalar path and
-    ``Resources`` vectors on the multi-resource path; ``ideal_bins`` is the
-    L1 lower bound (dominant-dimension L1 for vectors).
+    ``Resources`` vectors on the multi-resource path — except when the run
+    was fed an ndarray of worker loads (the fleet-scale fast path), in
+    which case it is the raw ``(n_bins, n_dims)`` used matrix.
+    ``ideal_bins`` is the L1 lower bound (dominant-dimension L1 for
+    vectors).
     """
 
     t: float
@@ -91,6 +113,15 @@ class BinPackingManager:
         self.config = config or AllocatorConfig()
         self._last_run_t: Optional[float] = None
         self.runs: List[PackingRun] = []
+        # incremental-repack cache (numpy engine): loads snapshot, the
+        # derived pre-fill matrix min(load, cap), the capacity vector it was
+        # built against, and the previous run's placement frontier
+        self._inc_loads: Optional[np.ndarray] = None
+        self._inc_prefill: Optional[np.ndarray] = None
+        self._inc_cap: Optional[np.ndarray] = None
+        self._inc_frontier: np.ndarray = np.empty(0, dtype=np.int64)
+        self.full_repacks = 0        # numpy runs that rebuilt the matrix
+        self.incremental_runs = 0    # numpy runs that refreshed dirty rows
 
     def should_run(self, t: float) -> bool:
         return (
@@ -116,8 +147,23 @@ class BinPackingManager:
         ``Resources`` capacity, a vector packing policy, or ``Resources``
         loads/size estimates.  A scalar run is bit-for-bit the paper's
         behaviour.
+
+        ``worker_loads`` may also be an ndarray — ``(n,)`` scalar or
+        ``(n, D)`` vector — which skips every per-worker Python scan and is
+        packed by the numpy engine regardless of ``config.engine`` (the
+        object packers have no array path).  With ``engine="auto"`` (the
+        default) list inputs switch to the numpy engine once the fleet
+        reaches ``config.numpy_bin_threshold`` bins; placements are
+        identical either way.
         """
         cfg = self.config
+        is_arr = isinstance(worker_loads, np.ndarray)
+        use_numpy = cfg.engine == "numpy" or is_arr or (
+            cfg.engine == "auto"
+            and len(worker_loads) >= cfg.numpy_bin_threshold
+        )
+        if use_numpy:
+            return self._run_numpy(t, requests, worker_loads)
         if (
             isinstance(cfg.capacity, Resources)
             or is_vector_policy(cfg.algorithm)
@@ -233,6 +279,204 @@ class BinPackingManager:
             target_workers=target,
             ideal_bins=ideal,
             scheduled_load=[Resources(dims, b.used) for b in packer.bins],
+        )
+        self.runs.append(run)
+        return run
+
+    # -- numpy engine: matrix pre-fill, incremental refresh, batch place -----
+    def _numpy_prefill(
+        self, loads_mat: np.ndarray, cap_vec: np.ndarray
+    ) -> np.ndarray:
+        """The ``(n, D)`` pre-fill matrix ``min(load, cap)`` for this run.
+
+        With ``config.incremental`` the previous run's matrix is reused and
+        only dirty rows are recomputed: rows whose load changed since the
+        last run (exact float compare — a bitwise-equal load yields a
+        bitwise-equal pre-fill, so clean rows need no work), rows beyond the
+        previous fleet size, and the previous placement frontier (bins the
+        last run placed requests into — redundant given the load compare,
+        but kept as belt-and-suspenders for views whose loads lag their
+        placements).  Because every row depends only on its own load, the
+        result is always element-for-element identical to a full rebuild;
+        when the dirty fraction exceeds ``config.dirty_fallback`` the full
+        rebuild is cheaper and is used instead.
+        """
+        cfg = self.config
+        n, D = loads_mat.shape
+        cached = (
+            cfg.incremental
+            and self._inc_prefill is not None
+            and self._inc_prefill.shape[1] == D
+            and self._inc_cap is not None
+            and np.array_equal(self._inc_cap, cap_vec)
+        )
+        if cached:
+            prev_n = len(self._inc_loads)
+            common = min(n, prev_n)
+            dirty = np.zeros(n, dtype=bool)
+            if common:
+                dirty[:common] = (
+                    loads_mat[:common] != self._inc_loads[:common]
+                ).any(axis=1)
+            dirty[common:] = True
+            fr = self._inc_frontier
+            if fr.size:
+                dirty[fr[fr < n]] = True
+            if n == 0 or (int(dirty.sum()) / n) <= cfg.dirty_fallback:
+                if prev_n == n:
+                    prefill = self._inc_prefill
+                else:
+                    prefill = np.empty((n, D), dtype=np.float64)
+                    prefill[:common] = self._inc_prefill[:common]
+                prefill[dirty] = np.minimum(loads_mat[dirty], cap_vec)
+                self.incremental_runs += 1
+            else:
+                prefill = np.minimum(loads_mat, cap_vec)
+                self.full_repacks += 1
+        else:
+            prefill = np.minimum(loads_mat, cap_vec)
+            self.full_repacks += 1
+        self._inc_loads = loads_mat.copy()
+        self._inc_prefill = prefill
+        self._inc_cap = cap_vec.copy()
+        return prefill
+
+    def _run_numpy(
+        self,
+        t: float,
+        requests: Sequence[HostRequest],
+        worker_loads,
+    ) -> PackingRun:
+        """One packing run on the numpy engine.
+
+        Mirrors the scalar/vector object runs decision-for-decision (same
+        clamps, same pre-fill, same packer semantics — pinned by
+        ``tests/test_packer_equivalence.py``); the differences are
+        representational: the fleet is one ``(n, D)`` matrix, and when the
+        loads arrive as an ndarray the returned ``scheduled_load`` is the
+        raw used matrix instead of a list of floats/``Resources`` (building
+        10⁴ objects per decision would defeat the point).
+        """
+        cfg = self.config
+        self._last_run_t = t
+        is_arr = isinstance(worker_loads, np.ndarray)
+        loads_D = (
+            worker_loads.shape[1]
+            if is_arr and worker_loads.ndim == 2
+            else None
+        )
+        vector_mode = (
+            isinstance(cfg.capacity, Resources)
+            or is_vector_policy(cfg.algorithm)
+            or (loads_D is not None and loads_D > 1)
+            or any(isinstance(r.size_estimate, Resources) for r in requests)
+        )
+        if not vector_mode and not is_arr:
+            vector_mode = any(
+                isinstance(load, Resources) for load in worker_loads
+            )
+
+        # -- capacity vector + dimension names
+        if vector_mode:
+            dims = self._resolve_dims(
+                requests, () if is_arr else worker_loads
+            )
+            if loads_D is not None and len(dims) < loads_D:
+                dims = tuple(dims) + tuple(
+                    f"res{i}" for i in range(len(dims), loads_D)
+                )
+            D = len(dims)
+            cap_vec = (
+                as_resources(cfg.capacity, dims).values.astype(np.float64)
+                if isinstance(cfg.capacity, Resources)
+                else np.full(D, float(cfg.capacity))
+            )
+        else:
+            dims = ("cpu",)
+            D = 1
+            cap_vec = np.full(1, float(cfg.capacity))
+
+        # -- worker loads as an (n, D) matrix
+        if is_arr:
+            loads_mat = np.asarray(worker_loads, dtype=np.float64)
+            if loads_mat.ndim == 1:
+                loads_mat = loads_mat[:, None]
+            if loads_mat.shape[1] < D:  # scalar loads on a vector run
+                padded = np.zeros((len(loads_mat), D), dtype=np.float64)
+                padded[:, : loads_mat.shape[1]] = loads_mat
+                loads_mat = padded
+            elif loads_mat.shape[1] > D:
+                raise ValueError(
+                    f"worker load matrix has {loads_mat.shape[1]} dimensions "
+                    f"but the run resolves to {D} ({dims})"
+                )
+        elif vector_mode:
+            loads_mat = np.array(
+                [as_resources(load, dims).values for load in worker_loads],
+                dtype=np.float64,
+            ).reshape(len(worker_loads), D)
+        else:
+            loads_mat = np.array(
+                [float(load) for load in worker_loads], dtype=np.float64
+            )[:, None]
+
+        # -- item sizes, clamped exactly like the object paths
+        item_hi = cap_vec - cfg.headroom
+        m = len(requests)
+        sizes = np.empty((m, D), dtype=np.float64)
+        if vector_mode:
+            for i, req in enumerate(requests):
+                size = as_resources(req.size_estimate, dims).values
+                size = np.minimum(size, item_hi)
+                size = np.maximum(size, 0.0)
+                size[0] = max(size[0], min(1e-3, item_hi[0]))
+                sizes[i] = size
+        else:
+            hi = float(item_hi[0])
+            for i, req in enumerate(requests):
+                sizes[i, 0] = min(max(req.size_estimate, 1e-3), hi)
+
+        algorithm = (
+            vector_equivalent(cfg.algorithm) if vector_mode else cfg.algorithm
+        )
+        prefill = self._numpy_prefill(loads_mat, cap_vec)
+        packer = NumpyPacker(
+            algorithm,
+            capacity=tuple(cap_vec) if vector_mode else float(cap_vec[0]),
+            used=prefill,
+        )
+        assignments = packer.place_batch(sizes)
+        self._inc_frontier = np.unique(assignments)
+
+        placements: List[HostRequest] = []
+        for req, idx in zip(requests, assignments):
+            req.target_worker = int(idx)
+            placements.append(req)
+
+        used = packer.used_matrix()
+        used_bins = int((used > 1e-9).any(axis=1).sum())
+        ideal = 0
+        for total, c in zip(used.sum(axis=0).tolist(), cap_vec.tolist()):
+            if total > 0:
+                ideal = max(ideal, max(1, int(math.ceil(total / c - _EPS))))
+        target = used_bins + (
+            idle_buffer(used_bins) if cfg.keep_idle_buffer else 0
+        )
+
+        if is_arr:
+            scheduled: List = used.copy()  # the raw (n, D) matrix
+        elif vector_mode:
+            scheduled = [Resources(dims, row) for row in used]
+        else:
+            scheduled = [float(u) for u in used[:, 0]]
+
+        run = PackingRun(
+            t=t,
+            placements=placements,
+            num_bins=used_bins,
+            target_workers=target,
+            ideal_bins=ideal,
+            scheduled_load=scheduled,
         )
         self.runs.append(run)
         return run

@@ -19,11 +19,20 @@ Two First-Fit implementations are provided: a straightforward O(n·m) scan
 realizes the complexity bound quoted in the paper; they are equivalence-tested
 property-style in ``tests/test_binpack.py``.
 
-Everything here is plain Python on purpose: packing is control-flow-heavy,
+The object packers are plain Python on purpose: packing is control-flow-heavy,
 runs on the *host* (the master node in HarmonicIO terms), and its cost is
 microseconds per item (see ``benchmarks/binpack_microbench.py``) — it never
 belongs on the accelerator.  The JAX integration points (sequence packing,
 KV-page allocation, expert capacity) consume the *results* of these packers.
+
+For fleet-scale bin counts (10⁴ workers) the per-item Python scan over bin
+objects dominates the IRM's decision cost, so this module also ships a
+second engine, ``NumpyPacker``: the whole fleet is one ``(n_bins, n_dims)``
+float64 used-capacity matrix and every placement decision is a masked
+``argmax``/``argmin`` over it.  The numpy engine is *decision-equivalent* to
+the object packers — same placements, bit for bit — which
+``tests/test_packer_equivalence.py`` pins property-style for every policy.
+``make_packer(..., engine=...)`` selects between them.
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Any, Callable, Iterable, Optional, Sequence
+
+import numpy as np
 
 __all__ = [
     "Item",
@@ -52,6 +63,8 @@ __all__ = [
     "VectorNextFit",
     "DominantFit",
     "VectorFirstFitDecreasing",
+    "NumpyPacker",
+    "NUMPY_BIN_THRESHOLD",
     "lower_bound",
     "vector_lower_bound",
     "make_packer",
@@ -633,6 +646,267 @@ class VectorFirstFitDecreasing:
 
 
 # ---------------------------------------------------------------------------
+# Numpy engine: the whole fleet as one (n_bins, n_dims) float64 matrix
+# ---------------------------------------------------------------------------
+
+# Policies the numpy engine implements.  ``harmonic`` and the scalar FFD are
+# microbenchmark-only and stay object-based.
+_NUMPY_SCALAR = ("first-fit", "first-fit-tree", "best-fit", "worst-fit",
+                 "next-fit")
+_NUMPY_VECTOR = ("vector-first-fit", "vector-best-fit", "vector-next-fit",
+                 "dominant-fit", "vector-ffd")
+
+# ``make_packer(engine="auto")`` switches to the numpy engine once a packing
+# run's pre-filled bin count reaches this threshold.  Below it the object
+# packers win (no array setup cost); above it the O(bins) Python scan per
+# item dominates and the vectorized argmax/argmin decision takes over.
+NUMPY_BIN_THRESHOLD = 64
+
+
+class NumpyPacker:
+    """Array-backed packing engine, decision-equivalent to the object packers.
+
+    State is a single ``(n_bins, n_dims)`` float64 *used*-capacity matrix
+    (scalar policies are the ``n_dims == 1`` case) plus the capacity vector;
+    every placement decision is a feasibility mask and one masked
+    ``argmax``/``argmin`` over the fleet, so a decision costs one vectorized
+    pass instead of a Python loop over bin objects.
+
+    Equivalence to the object packers is bit-for-bit on placements, pinned
+    by ``tests/test_packer_equivalence.py``.  The invariants that make it
+    hold:
+
+    - free capacity is recomputed fresh per decision as ``cap - used`` (never
+      decremented incrementally — ``(a - b) - c != a - (b + c)`` in floats),
+      exactly like ``Bin.free``/``VectorBin.free``;
+    - the used matrix grows by sequential ``used[idx] += sizes`` adds, the
+      same additions in the same order as ``Bin.add``/``VectorBin.add``;
+    - ``np.argmax``/``np.argmin`` return the *first* occurrence of the
+      extremum, matching the object packers' strict ``<``/``>`` scans and
+      ``max(feasible, key=...)`` tie-breaks (lowest index wins);
+    - per-bin scores sum along ``axis=1`` sequentially for ``n_dims < 8``
+      (numpy's pairwise-summation base case), matching Python's ``sum()``.
+      Beyond 7 resource dimensions score ties could in principle break
+      differently; the IRM's clusters use 2–4 dimensions.
+
+    Supports pre-filled open bins via ``bins=`` (a list of ``Bin`` /
+    ``VectorBin``, the object-packer protocol) or ``used=`` (an ``(n,)`` or
+    ``(n, D)`` array — the fast path the allocator uses).  ``pack_one`` /
+    ``pack`` mirror the object API including oversize validation;
+    ``place``/``place_batch`` are the raw-array fast paths with no Item
+    wrappers.  The ``bins`` property *materializes* object bins on demand
+    (compat/introspection only — it is O(n) per access and the returned
+    bins' ``items`` lists are empty).
+    """
+
+    def __init__(
+        self,
+        policy: str,
+        capacity: Any = 1.0,
+        bins: Optional[list] = None,
+        used: Optional[Any] = None,
+        heuristic: str = "first",
+    ):
+        if policy not in _NUMPY_SCALAR and policy not in _NUMPY_VECTOR:
+            raise ValueError(
+                f"policy {policy!r} has no numpy engine; "
+                f"scalar options: {sorted(_NUMPY_SCALAR)}; "
+                f"vector options: {sorted(_NUMPY_VECTOR)}"
+            )
+        if heuristic not in ("first", "dot", "l2"):
+            raise ValueError(f"unknown heuristic {heuristic!r}")
+        self.policy = policy
+        self.name = policy
+        self.is_vector = policy in _NUMPY_VECTOR
+        # vector-ffd's object twin always places with the default First-Fit
+        # criterion after sorting; a non-default heuristic would silently
+        # diverge from it.
+        self.heuristic = heuristic if policy == "vector-first-fit" else "first"
+        caps = _normalize_capacity(capacity)
+        if not self.is_vector and len(caps) != 1:
+            raise ValueError(
+                f"scalar policy {policy!r} takes a scalar capacity, got {caps}"
+            )
+        self.capacity = caps if self.is_vector else caps[0]
+        self._cap_vec = np.asarray(caps, dtype=np.float64)
+        self.ndims = len(caps)
+
+        if bins is not None and used is not None:
+            raise ValueError("pass pre-filled state as bins= or used=, not both")
+        prefill = None
+        if bins is not None:
+            prefill = np.array(
+                [np.atleast_1d(np.asarray(b.used, dtype=np.float64))
+                 for b in bins],
+                dtype=np.float64,
+            ).reshape(len(bins), self.ndims)
+        elif used is not None:
+            prefill = np.array(used, dtype=np.float64)
+            if prefill.ndim == 1:
+                prefill = prefill[:, None]
+            if prefill.ndim != 2 or prefill.shape[1] != self.ndims:
+                raise ValueError(
+                    f"used matrix shape {prefill.shape} does not match "
+                    f"{self.ndims} capacity dimensions"
+                )
+        n = 0 if prefill is None else len(prefill)
+        alloc = 16
+        while alloc < n:
+            alloc *= 2
+        self._used = np.zeros((alloc, self.ndims), dtype=np.float64)
+        if n:
+            self._used[:n] = prefill
+        self._n = n
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def n_bins(self) -> int:
+        return self._n
+
+    def used_matrix(self) -> "np.ndarray":
+        """The live ``(n_bins, n_dims)`` used matrix (a view — copy to keep)."""
+        return self._used[: self._n]
+
+    @property
+    def bins(self) -> list:
+        """Materialize object bins (compat only; O(n), empty ``items``)."""
+        if self.is_vector:
+            return [VectorBin(self.capacity, used=tuple(row))
+                    for row in self._used[: self._n]]
+        return [Bin(self.capacity, used=float(row[0]))
+                for row in self._used[: self._n]]
+
+    def reset(self) -> None:
+        self._n = 0
+
+    def _grow(self) -> None:
+        grown = np.zeros((self._used.shape[0] * 2, self.ndims), dtype=np.float64)
+        grown[: self._n] = self._used[: self._n]
+        self._used = grown
+
+    def _open_bin(self) -> int:
+        if self._n == self._used.shape[0]:
+            self._grow()
+        idx = self._n
+        self._used[idx] = 0.0
+        self._n += 1
+        return idx
+
+    # -- decision ------------------------------------------------------------
+    def _choose(self, s: "np.ndarray") -> Optional[int]:
+        """Active-bin index for item ``s`` (a (D,) array), or None to open."""
+        n = self._n
+        if n == 0:
+            return None
+        p = self.policy
+        if p in ("next-fit", "vector-next-fit"):
+            free_last = self._cap_vec - self._used[n - 1]
+            return n - 1 if bool((s <= free_last + _EPS).all()) else None
+        used = self._used[:n]
+        free = self._cap_vec - used
+        feas = (s <= free + _EPS).all(axis=1)
+        if not feas.any():
+            return None
+        if p in ("first-fit", "first-fit-tree"):
+            return int(np.argmax(feas))
+        if p == "best-fit":
+            return int(np.argmin(np.where(feas, free[:, 0], np.inf)))
+        if p == "worst-fit":
+            return int(np.argmax(np.where(feas, free[:, 0], -np.inf)))
+        if p in ("vector-first-fit", "vector-ffd"):
+            if self.heuristic == "first":
+                return int(np.argmax(feas))
+            if self.heuristic == "dot":
+                score = (used * s).sum(axis=1)
+            else:  # l2: negative residual norm (maximize => minimize residual)
+                resid = free - s
+                score = -np.sqrt((resid * resid).sum(axis=1))
+            return int(np.argmax(np.where(feas, score, -np.inf)))
+        if p == "vector-best-fit":
+            resid = ((free - s) / self._cap_vec).sum(axis=1)
+            return int(np.argmin(np.where(feas, resid, np.inf)))
+        # dominant-fit: most free capacity in the item's dominant dimension
+        d = int(np.argmax(s / np.maximum(self._cap_vec, 1e-12)))
+        return int(np.argmax(np.where(feas, free[:, d], -np.inf)))
+
+    # -- raw-array fast path (what the allocator drives) ---------------------
+    def place(self, sizes: Any) -> int:
+        """Place one item given as a length-D array; returns the bin index."""
+        s = np.asarray(sizes, dtype=np.float64).reshape(self.ndims)
+        idx = self._choose(s)
+        if idx is None:
+            idx = self._open_bin()
+        self._used[idx] += s
+        return idx
+
+    def place_batch(self, sizes: Any) -> "np.ndarray":
+        """Place ``(m, D)`` (or ``(m,)`` scalar) sizes; returns assignments.
+
+        ``vector-ffd`` reorders the batch largest-dominant-share-first with
+        a stable sort (same keys, same order as the object FFD's
+        ``sorted(..., key=-dominant)``) and reports assignments in the
+        original item order; every other policy packs in arrival order.
+        """
+        sizes = np.asarray(sizes, dtype=np.float64)
+        if sizes.ndim == 1:
+            sizes = sizes[:, None]
+        m = len(sizes)
+        out = np.empty(m, dtype=np.int64)
+        if self.policy == "vector-ffd" and m > 1:
+            shares = (sizes / np.maximum(self._cap_vec, 1e-12)).max(axis=1)
+            order = np.argsort(-shares, kind="stable")
+        else:
+            order = range(m)
+        for i in order:
+            out[i] = self.place(sizes[i])
+        return out
+
+    # -- object-API compat ----------------------------------------------------
+    def pack_one(self, item: Any) -> int:
+        """Pack one ``Item``/``VectorItem`` with object-packer validation."""
+        if self.policy == "vector-ffd":
+            raise TypeError(
+                "vector-ffd is an offline packer; use pack() or place_batch()"
+            )
+        if self.is_vector:
+            s = np.asarray(item.sizes, dtype=np.float64)
+            if (s > self._cap_vec + _EPS).any():
+                raise ValueError(
+                    f"item sizes {item.sizes} exceed bin capacity "
+                    f"{self.capacity}"
+                )
+        else:
+            if item.size > self.capacity + _EPS:
+                raise ValueError(
+                    f"item size {item.size} exceeds bin capacity "
+                    f"{self.capacity}"
+                )
+            s = np.asarray([item.size], dtype=np.float64)
+        return self.place(s)
+
+    def pack(self, items: Iterable[Any]) -> PackResult:
+        items = list(items)
+        before = self._n
+        if self.policy == "vector-ffd":
+            for it in items:
+                if any(x > c + _EPS for x, c in zip(it.sizes, self.capacity)):
+                    raise ValueError(
+                        f"item sizes {it.sizes} exceed bin capacity "
+                        f"{self.capacity}"
+                    )
+            sizes = np.array([it.sizes for it in items], dtype=np.float64)
+            sizes = sizes.reshape(len(items), self.ndims)
+            assignments = [int(i) for i in self.place_batch(sizes)]
+        else:
+            assignments = [self.pack_one(it) for it in items]
+        return PackResult(
+            assignments=assignments,
+            bins=self.bins,
+            opened=self._n - before,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Utilities
 # ---------------------------------------------------------------------------
 
@@ -640,12 +914,18 @@ class VectorFirstFitDecreasing:
 def lower_bound(sizes: Iterable[float], capacity: float = 1.0) -> int:
     """L1 lower bound on the optimal bin count: ceil(sum(sizes)/capacity).
 
-    This is the "ideal number of bins" line in the paper's Fig. 10.
+    This is the "ideal number of bins" line in the paper's Fig. 10.  Empty
+    input needs 0 bins; any strictly positive total needs at least 1 (the
+    ``- _EPS`` slack must not round a tiny-but-real load down to "no bins");
+    a single item larger than the capacity raises the bound past 1 exactly
+    as the L1 sum dictates.
     """
+    if capacity <= 0:
+        raise ValueError(f"bin capacity must be positive, got {capacity}")
     total = sum(sizes)
     if total <= 0:
         return 0
-    return int(math.ceil(total / capacity - _EPS))
+    return max(1, int(math.ceil(total / capacity - _EPS)))
 
 
 def vector_lower_bound(
@@ -656,16 +936,26 @@ def vector_lower_bound(
 
     Each dimension gives an independent L1 bound ``ceil(sum_d / cap_d)``;
     the optimum can do no better than the worst (dominant) dimension.
+    Items must not carry more dimensions than the capacity vector (extra
+    demand would silently vanish from the bound otherwise).
     """
     caps = _normalize_capacity(capacity)
+    for cap in caps:
+        if cap <= 0:
+            raise ValueError(f"bin capacity must be positive, got {caps}")
     totals = [0.0] * len(caps)
     for sizes in size_vectors:
+        if len(sizes) > len(caps):
+            raise ValueError(
+                f"size vector {tuple(sizes)} has more dimensions than "
+                f"capacity {caps}"
+            )
         for d, s in enumerate(sizes):
             totals[d] += s
     best = 0
     for total, cap in zip(totals, caps):
         if total > 0:
-            best = max(best, int(math.ceil(total / cap - _EPS)))
+            best = max(best, max(1, int(math.ceil(total / cap - _EPS))))
     return best
 
 
@@ -716,13 +1006,46 @@ def vector_equivalent(name: str) -> str:
         ) from None
 
 
-def make_packer(name: str, capacity: Any = 1.0, **kw: Any) -> Any:
+def _prefill_count(kw: dict) -> int:
+    """Pre-filled bin count implied by a make_packer bins=/used= kwarg."""
+    state = kw.get("bins")
+    if state is None:
+        state = kw.get("used")
+    return len(state) if state is not None else 0
+
+
+def make_packer(
+    name: str,
+    capacity: Any = 1.0,
+    engine: Optional[str] = None,
+    **kw: Any,
+) -> Any:
     """Factory used by the IRM config (``irm.packing_algorithm``).
 
     Resolves both the scalar Any-Fit family and the vector packers; vector
     names accept a float capacity (normalized to a 1-vector), a tuple, or a
     ``Resources``.
+
+    ``engine`` selects the implementation:
+
+    - ``None`` / ``"object"``: the per-bin object packers (default);
+    - ``"numpy"``: the array-backed ``NumpyPacker`` (raises for policies
+      without a numpy implementation, e.g. ``harmonic``);
+    - ``"auto"``: the numpy engine when the policy has one *and* the
+      pre-filled bin count (``bins=``/``used=``) reaches
+      ``NUMPY_BIN_THRESHOLD``, else the object packer.  Both engines make
+      identical placement decisions, so "auto" changes latency only.
     """
+    if engine not in (None, "object", "numpy", "auto"):
+        raise ValueError(
+            f"unknown packing engine {engine!r}; "
+            "expected 'object', 'numpy', or 'auto'"
+        )
+    has_numpy = name in _NUMPY_SCALAR or name in _NUMPY_VECTOR
+    if engine == "numpy":
+        return NumpyPacker(name, capacity=capacity, **kw)
+    if engine == "auto" and has_numpy and _prefill_count(kw) >= NUMPY_BIN_THRESHOLD:
+        return NumpyPacker(name, capacity=capacity, **kw)
     cls = _PACKERS.get(name) or _VECTOR_PACKERS.get(name)
     if cls is None:
         raise ValueError(
@@ -730,4 +1053,18 @@ def make_packer(name: str, capacity: Any = 1.0, **kw: Any) -> Any:
             f"scalar options: {sorted(_PACKERS)}; "
             f"vector options: {sorted(_VECTOR_PACKERS)}"
         )
+    used = kw.pop("used", None)
+    if used is not None:
+        # object packers take pre-filled state as bins; materialize them so
+        # an engine="auto" caller below the threshold loses nothing
+        if "bins" in kw:
+            raise ValueError("pass pre-filled state as bins= or used=, not both")
+        if name in _VECTOR_PACKERS:
+            caps = _normalize_capacity(capacity)
+            kw["bins"] = [
+                VectorBin(caps, used=tuple(np.atleast_1d(row)))
+                for row in np.asarray(used, dtype=np.float64)
+            ]
+        else:
+            kw["bins"] = [Bin(float(capacity), used=float(u)) for u in used]
     return cls(capacity=capacity, **kw)

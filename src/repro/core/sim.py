@@ -49,6 +49,7 @@ import dataclasses
 import enum
 import heapq
 import math
+from bisect import insort
 from collections import deque
 from itertools import islice
 from typing import Deque, Dict, List, Optional, Tuple
@@ -238,6 +239,25 @@ class SimCluster:
         self._busy: List[Tuple[float, int, int, SimPE, Message]] = []  # done_t
         self._idle: Dict[Tuple[int, int], SimPE] = {}
         self._dirty_workers: set = set()  # workers with STOPPED PEs to compact
+        # ---- worker indices (fleet-scale lifecycle) -----------------------
+        # The probe/measure/recording paths and the lifecycle transitions
+        # iterate these instead of scanning the whole pool, so a tick costs
+        # O(active workers + transitions) rather than O(pool slots):
+        #   _active_idx — ACTIVE worker indices, kept sorted ascending so
+        #       every iteration order (and hence RNG draw order and float
+        #       summation order) matches the reference's full scan;
+        #   _boot_heap  — (ready_t, idx) min-heap of BOOTING workers with
+        #       lazy invalidation (an entry is live iff the worker is still
+        #       BOOTING with that exact ready_t);
+        #   _off_heap   — min-heap of OFF slot indices; its top is the
+        #       lowest OFF slot, mirroring the reference's first-OFF scan
+        #       (a *failed* top blocks reuse and forces appends, exactly
+        #       like the reference finding the failed slot first);
+        #   _n_alive    — count of non-OFF workers.
+        self._active_idx: List[int] = []
+        self._boot_heap: List[Tuple[float, int]] = []
+        self._off_heap: List[int] = []
+        self._n_alive = 0
 
     # ---- master queue ---------------------------------------------------------
     def _push_back(self, m: Message) -> None:
@@ -295,19 +315,24 @@ class SimCluster:
         # scheduling state, not placement-time snapshots (Section V-B.3).
         # Estimates are looked up once per image per call; the accumulation
         # stays in PE-list order so the float sum matches the reference.
+        # Only ACTIVE workers can host PEs (BOOTING pools are empty, OFF
+        # slots report zero), so the PE accumulation visits the active index
+        # instead of scanning the whole pool — values are identical to the
+        # reference's full scan.
         est = self.irm.profiler.estimate
         cache: Dict[str, float] = {}
         stopped = PEState.STOPPED
+        workers = self.workers
         if self._multi:
             # vector mode: per-dimension float64 accumulation, same order
             D = len(self._dims)
-            vout: List[Resources] = []
-            for w in self.workers:
-                if w.state is WorkerState.OFF:
-                    vout.append(Resources(self._dims, np.zeros(D)))
-                    continue
+            dims = self._dims
+            vout: List[Resources] = [
+                Resources(dims, np.zeros(D)) for _ in range(len(workers))
+            ]
+            for idx in self._active_idx:
                 load = np.zeros(D)
-                for pe in w.pes:
+                for pe in workers[idx].pes:
                     if pe.state is stopped:
                         continue
                     img = pe.image
@@ -315,15 +340,12 @@ class SimCluster:
                     if v is None:
                         v = cache[img] = est(img).values
                     load = load + v
-                vout.append(Resources(self._dims, load))
+                vout[idx] = Resources(dims, load)
             return vout
-        out = []
-        for w in self.workers:
-            if w.state is WorkerState.OFF:
-                out.append(0.0)
-                continue
+        out = [0.0] * len(workers)
+        for idx in self._active_idx:
             load = 0.0
-            for pe in w.pes:
+            for pe in workers[idx].pes:
                 if pe.state is stopped:
                     continue
                 img = pe.image
@@ -331,7 +353,7 @@ class SimCluster:
                 if v is None:
                     v = cache[img] = est(img)
                 load += v
-            out.append(load)
+            out[idx] = load
         return out
 
     def backlog_resource_demand(self) -> Optional[Resources]:
@@ -359,32 +381,58 @@ class SimCluster:
         heapq.heappush(self._starting, (pe.ready_t, idx, pe.uid, pe))
         return True
 
+    def _lowest_off_slot(self) -> Optional[SimWorker]:
+        """The lowest-index OFF worker (the reference's first-OFF scan).
+
+        May return a *failed* worker: the reference's scan stops at the
+        first OFF slot and, seeing it failed, appends a fresh worker — a
+        failed lowest slot must block reuse here too, so it is peeked but
+        never popped.
+        """
+        h = self._off_heap
+        while h:
+            w = self.workers[h[0]]
+            if w.state is not WorkerState.OFF:
+                heapq.heappop(h)  # stale entry (slot was reused)
+                continue
+            return w
+        return None
+
     def scale_workers(self, target: int) -> None:
         self.requested_target = target
         capped = min(target, self.cfg.max_workers)
-        n_alive = sum(1 for w in self.workers if w.state != WorkerState.OFF)
+        n_alive = self._n_alive
         # boot additional workers
         while n_alive < capped:
             # reuse the lowest OFF slot if any, else append
-            slot = next(
-                (w for w in self.workers if w.state == WorkerState.OFF), None
-            )
+            slot = self._lowest_off_slot()
             if slot is not None and slot.idx not in self._failed:
+                heapq.heappop(self._off_heap)
                 slot.state = WorkerState.BOOTING
                 slot.ready_t = self.t + self.cfg.worker_boot_delay
+                heapq.heappush(self._boot_heap, (slot.ready_t, slot.idx))
             else:
-                self.workers.append(
-                    SimWorker(len(self.workers), self.t, self.cfg.worker_boot_delay)
+                w = SimWorker(
+                    len(self.workers), self.t, self.cfg.worker_boot_delay
                 )
+                self.workers.append(w)
+                if w.state is WorkerState.BOOTING:
+                    heapq.heappush(self._boot_heap, (w.ready_t, w.idx))
+                else:  # zero boot delay: born ACTIVE
+                    insort(self._active_idx, w.idx)
             n_alive += 1
         # deactivate empty workers above the target (highest index first)
         if n_alive > capped:
-            for w in reversed(self.workers):
+            for idx in reversed(list(self._active_idx)):
                 if n_alive <= capped:
                     break
-                if w.state == WorkerState.ACTIVE and not w.pes:
+                w = self.workers[idx]
+                if not w.pes:
                     w.state = WorkerState.OFF
+                    self._active_idx.remove(idx)
+                    heapq.heappush(self._off_heap, idx)
                     n_alive -= 1
+        self._n_alive = n_alive
 
     # ---- simulation dynamics ---------------------------------------------------
     def _inject_failure(self) -> None:
@@ -407,6 +455,13 @@ class SimCluster:
                 pe.state = PEState.STOPPED
                 pe.msg = None
             w.pes = []
+            if w.state is not WorkerState.OFF:
+                if w.state is WorkerState.ACTIVE:
+                    self._active_idx.remove(idx)
+                # a BOOTING victim leaves a stale _boot_heap entry behind;
+                # the promotion pass skips it (state no longer matches)
+                self._n_alive -= 1
+                heapq.heappush(self._off_heap, idx)
             w.state = WorkerState.OFF
             self._failed.add(idx)
 
@@ -417,10 +472,17 @@ class SimCluster:
         self._inject_failure()
         t = self.t
 
-        # worker lifecycle (the pool is tiny — max_workers caps it)
-        for w in self.workers:
-            if w.state == WorkerState.BOOTING and t >= w.ready_t:
+        # worker lifecycle: promote ready BOOTING workers off the min-heap
+        # (the transition depends only on t, so heap order == scan order
+        # up to the irrelevant promotion sequence; the sorted active index
+        # preserves every downstream iteration order)
+        bh_boot = self._boot_heap
+        while bh_boot and bh_boot[0][0] <= t:
+            rt, widx = heapq.heappop(bh_boot)
+            w = self.workers[widx]
+            if w.state is WorkerState.BOOTING and w.ready_t == rt:
                 w.state = WorkerState.ACTIVE
+                insort(self._active_idx, widx)
 
         # STARTING -> IDLE.  Transition conditions depend only on t, so
         # draining the ready heap is order-equivalent to the reference
@@ -507,9 +569,10 @@ class SimCluster:
         n = max(len(self.workers), 1)
         out = np.zeros(n)
         dim_out = np.zeros((n, D))
-        for w in self.workers:
-            if w.state != WorkerState.ACTIVE:
-                continue
+        # ascending active indices == the reference's full scan filtered to
+        # ACTIVE workers: same RNG draw order, same probe accumulation order
+        for idx in self._active_idx:
+            w = self.workers[idx]
             totals = np.zeros(D)
             acc, counts = w.probe.accumulators()
             for pe in w.pes:
@@ -553,9 +616,10 @@ class SimCluster:
         rng_normal = self.rng.normal
         busy, idle = PEState.BUSY, PEState.IDLE
         out = np.zeros(max(len(self.workers), 1))
-        for w in self.workers:
-            if w.state != WorkerState.ACTIVE:
-                continue
+        # ascending active indices == the reference's full scan filtered to
+        # ACTIVE workers: same RNG draw order, same probe accumulation order
+        for idx in self._active_idx:
+            w = self.workers[idx]
             cores = 0.0
             # accumulate straight into the probe's per-image running means
             # (same order and float addition as WorkerProbe.sample)
@@ -586,8 +650,9 @@ class SimCluster:
 
     def flush_probes(self) -> None:
         dims = self._dims if self._multi else None
-        for w in self.workers:
-            if w.state == WorkerState.ACTIVE and w.pes:
+        for idx in self._active_idx:
+            w = self.workers[idx]
+            if w.pes:
                 report = w.probe.report()
                 if report:
                     if dims is not None:
@@ -642,7 +707,6 @@ def simulate(
     W = cfg.max_workers
     workers = cluster.workers
     estimate = irm.profiler.estimate
-    ACTIVE_STATE = WorkerState.ACTIVE
     last_report_t = -1e9
     n = 0
 
@@ -696,16 +760,19 @@ def simulate(
                 srow[j] = v if v < 1.0 else 1.0
 
         qlen[n] = cluster._qlen
+        # PEs only live on ACTIVE workers (BOOTING pools are empty; OFF
+        # transitions clear or forbid PEs), so counting over the sorted
+        # active index reproduces the reference's full-pool scan, including
+        # the float order of the busy-load accumulation.
         if multi:
-            n_active = 0
+            n_active = len(cluster._active_idx)
             n_pes = 0
             busy_vec = np.zeros(D)
-            for w in workers:
-                n_pes += len(w.pes)
-                if w.state is ACTIVE_STATE:
-                    n_active += 1
-                    for pe in w.pes:
-                        busy_vec = busy_vec + pe.estimate.values
+            for widx in cluster._active_idx:
+                pes = workers[widx].pes
+                n_pes += len(pes)
+                for pe in pes:
+                    busy_vec = busy_vec + pe.estimate.values
             active[n] = n_active
             target[n] = cluster.requested_target
             pe_count[n] = n_pes
@@ -720,15 +787,14 @@ def simulate(
             ))
             n += 1
         else:
-            n_active = 0
+            n_active = len(cluster._active_idx)
             n_pes = 0
             busy_load = 0.0
-            for w in workers:
-                n_pes += len(w.pes)
-                if w.state is ACTIVE_STATE:
-                    n_active += 1
-                    for pe in w.pes:
-                        busy_load += pe.estimate
+            for widx in cluster._active_idx:
+                pes = workers[widx].pes
+                n_pes += len(pes)
+                for pe in pes:
+                    busy_load += pe.estimate
             active[n] = n_active
             target[n] = cluster.requested_target
             pe_count[n] = n_pes

@@ -28,9 +28,9 @@ from __future__ import annotations
 
 from typing import Set
 
-from ..core.sim import SimConfig, WorkerState
+from ..core.sim import SimConfig
 from .clock import ScaledClock
-from .worker import LiveWorker, WorkerPool
+from .worker import WorkerPool
 
 __all__ = ["Lifecycle"]
 
@@ -73,22 +73,19 @@ class Lifecycle:
     def scale_workers(self, target: int) -> None:
         self.requested_target = target
         cfg = self.cfg
-        workers = self.pool.workers
+        pool = self.pool
         t = self.nominal_t
         capped = min(target, cfg.max_workers)
-        n_alive = sum(1 for w in workers if w.state is not WorkerState.OFF)
-        # boot additional workers
+        n_alive = pool.n_alive()
+        # boot additional workers: reuse the lowest OFF slot unless it is
+        # a failed one (a dead lowest slot blocks reuse, matching the old
+        # lowest-index scan — the pool never reboots past a corpse)
         while n_alive < capped:
-            slot = next(
-                (w for w in workers if w.state is WorkerState.OFF), None
-            )
+            slot = pool.lowest_off_slot()
             if slot is not None and slot.idx not in self.failed:
-                slot.state = WorkerState.BOOTING
-                slot.ready_t = t + cfg.worker_boot_delay
+                pool.reboot_slot(slot, t + cfg.worker_boot_delay)
             else:
-                workers.append(
-                    LiveWorker(len(workers), t, cfg.worker_boot_delay)
-                )
+                pool.add_worker(t)
             n_alive += 1
         # Deactivate empty workers above the target (highest index first).
         # Live-only anti-churn guard: scale-down is deferred while a boot
@@ -105,12 +102,14 @@ class Lifecycle:
         # BOOTING slot whose delay has already elapsed (a stale boot — it
         # will be promoted or was orphaned by a kill) must not pin the
         # pool at max size forever.
-        if n_alive > capped and not any(
-            w.state is WorkerState.BOOTING and t < w.ready_t for w in workers
-        ):
-            for w in reversed(workers):
+        if n_alive > capped and not pool.boot_in_flight(t):
+            workers = pool.workers
+            # descending active indices == the old reversed full scan
+            # filtered to ACTIVE; copy because deactivate() mutates it
+            for idx in reversed(list(pool.active_indices())):
                 if n_alive <= capped:
                     break
-                if w.state is WorkerState.ACTIVE and not w.pes:
-                    w.state = WorkerState.OFF
+                w = workers[idx]
+                if not w.pes:
+                    pool.deactivate(w)
                     n_alive -= 1

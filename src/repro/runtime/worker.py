@@ -25,7 +25,9 @@ blocks rather than being skipped, exactly as in the simulator.
 from __future__ import annotations
 
 import asyncio
-from typing import List, Optional, Set, Tuple
+import heapq
+from bisect import insort
+from typing import Dict, List, Optional, Set, Tuple
 
 from ..core.profiler import WorkerProbe
 from ..core.queues import HostRequest
@@ -107,19 +109,91 @@ class WorkerPool:
         self._multi = len(self._dims) > 1
         self._pe_uid = 0
         self._tasks: Set[asyncio.Task] = set()
+        # Fleet-scale indices, mirroring ``SimCluster``'s: every state
+        # transition runs through the pool so per-tick queries
+        # (promote_booted, n_alive, pe_count, the lifecycle's anti-churn
+        # guard) cost O(transitions), not O(workers).
+        #   _booting     idx -> ready_t for exactly the BOOTING workers
+        #   _active_idx  sorted indices of ACTIVE workers (ascending scan
+        #                order == the old full scan filtered to ACTIVE)
+        #   _off_heap    min-heap of OFF slot indices; stale entries (slot
+        #                rebooted meanwhile) are discarded lazily on peek
+        self._booting: Dict[int, float] = {}
+        self._active_idx: List[int] = []
+        self._off_heap: List[int] = []
+        self._n_alive = 0
+        self._pe_total = 0
 
     # ---- lifecycle hooks (called by Lifecycle / the driver) ----------------
     def promote_booted(self, t: float) -> None:
         """BOOTING → ACTIVE once the boot delay has elapsed."""
-        for w in self.workers:
-            if w.state is WorkerState.BOOTING and t >= w.ready_t:
-                w.state = WorkerState.ACTIVE
+        if not self._booting:
+            return
+        due = [idx for idx, rt in self._booting.items() if t >= rt]
+        for idx in due:
+            del self._booting[idx]
+            self.workers[idx].state = WorkerState.ACTIVE
+            insort(self._active_idx, idx)
 
     def n_alive(self) -> int:
-        return sum(1 for w in self.workers if w.state is not WorkerState.OFF)
+        return self._n_alive
 
     def pe_count(self) -> int:
-        return sum(len(w.pes) for w in self.workers)
+        return self._pe_total
+
+    def boot_in_flight(self, t: float) -> bool:
+        """True while any boot is genuinely pending (BOOTING, delay not
+        yet elapsed) — the lifecycle's anti-churn predicate, answered from
+        the booting index instead of a pool scan."""
+        return any(t < rt for rt in self._booting.values())
+
+    def active_indices(self) -> List[int]:
+        """Sorted indices of ACTIVE workers (shared list — don't mutate)."""
+        return self._active_idx
+
+    # ---- scaling actuation (called by Lifecycle) ---------------------------
+    def add_worker(self, t: float) -> LiveWorker:
+        """Append a fresh worker slot and register it in the indices."""
+        w = LiveWorker(len(self.workers), t, self.cfg.worker_boot_delay)
+        self.workers.append(w)
+        self._n_alive += 1
+        if w.state is WorkerState.BOOTING:
+            self._booting[w.idx] = w.ready_t
+        else:  # zero boot delay: born ACTIVE
+            insort(self._active_idx, w.idx)
+        return w
+
+    def lowest_off_slot(self) -> Optional[LiveWorker]:
+        """Peek the lowest-index OFF slot without claiming it.
+
+        The returned slot may belong to a *failed* worker — the caller
+        decides (a failed lowest slot blocks reuse of higher OFF slots,
+        exactly like the old ``next(w for w in workers if OFF)`` scan,
+        because it stays at the top of the heap un-popped)."""
+        heap = self._off_heap
+        while heap:
+            w = self.workers[heap[0]]
+            if w.state is not WorkerState.OFF:
+                heapq.heappop(heap)  # stale: slot was rebooted since
+                continue
+            return w
+        return None
+
+    def reboot_slot(self, w: LiveWorker, ready_t: float) -> None:
+        """OFF → BOOTING on a slot returned by ``lowest_off_slot``."""
+        assert self._off_heap and self._off_heap[0] == w.idx
+        heapq.heappop(self._off_heap)
+        w.state = WorkerState.BOOTING
+        w.ready_t = ready_t
+        self._booting[w.idx] = ready_t
+        self._n_alive += 1
+
+    def deactivate(self, w: LiveWorker) -> None:
+        """ACTIVE → OFF (scale-down of an empty worker)."""
+        w.state = WorkerState.OFF
+        self._active_idx.remove(w.idx)
+        heapq.heappush(self._off_heap, w.idx)
+        self._n_alive -= 1
 
     def kill_worker(self, idx: int) -> List[Message]:
         """Abruptly terminate a worker: cancel its PE tasks, harvest the
@@ -143,7 +217,17 @@ class WorkerPool:
             pe.state = PEState.STOPPED
             if pe.task is not None and not pe.task.done():
                 pe.task.cancel()
+        # the cancelled tasks' ``finally`` blocks find an emptied ``pes``
+        # list and skip their own removal, so the count is settled here
+        self._pe_total -= len(w.pes)
         w.pes = []
+        if w.state is not WorkerState.OFF:
+            if w.state is WorkerState.ACTIVE:
+                self._active_idx.remove(idx)
+            else:  # BOOTING victim
+                self._booting.pop(idx, None)
+            self._n_alive -= 1
+            heapq.heappush(self._off_heap, idx)
         w.state = WorkerState.OFF
         return harvested
 
@@ -159,6 +243,7 @@ class WorkerPool:
         self._pe_uid += 1
         pe = LivePE(req.image, req.size_estimate, uid=self._pe_uid)
         w.pes.append(pe)
+        self._pe_total += 1
         pe.task = asyncio.get_running_loop().create_task(
             self._pe_main(w, pe), name=f"pe-{w.idx}-{pe.uid}-{req.image}"
         )
@@ -217,7 +302,9 @@ class WorkerPool:
             try:
                 worker.pes.remove(pe)
             except ValueError:
-                pass
+                pass  # kill_worker already cleared the list (and the count)
+            else:
+                self._pe_total -= 1
 
     # ---- shutdown ----------------------------------------------------------
     async def shutdown(self) -> None:

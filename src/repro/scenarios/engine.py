@@ -135,11 +135,16 @@ def run_scenario(
     backend: str = "sim",
     runtime: Optional[object] = None,
     sim_overrides: Optional[Dict[str, object]] = None,
+    engine: Optional[str] = None,
 ) -> ScenarioResult:
     """Run a scenario end to end and evaluate its expectations.
 
     ``policy`` overrides the packing algorithm inside the scenario's IRM
     config (any ``make_packer`` name); ``None`` keeps the scenario default.
+    ``engine`` overrides the allocator's packing engine (``"object"``,
+    ``"numpy"``, or ``"auto"``); the numpy engine is decision-identical to
+    the object packers (pinned by tests/test_packer_equivalence.py), so
+    this only changes who computes the placements.
     Runs ``n_runs`` back-to-back simulations with stream seeds
     ``base_seed + i``, reusing one IRM so the profiler state persists across
     runs exactly as in the paper's repeated-run experiment.  ``t_max`` and
@@ -171,6 +176,18 @@ def run_scenario(
             )
         make_packer(policy)  # validate the name before mutating the config
         irm_cfg.allocator.algorithm = policy
+    if engine is not None:
+        if irm is not None:
+            raise ValueError(
+                "engine and irm are mutually exclusive: a pre-built IRM "
+                "carries its own packing configuration"
+            )
+        if engine not in ("object", "numpy", "auto"):
+            raise ValueError(
+                f"unknown engine {engine!r}; expected 'object', 'numpy' "
+                "or 'auto'"
+            )
+        irm_cfg.allocator.engine = engine
     if irm is None:
         irm = IRM(irm_cfg)
     else:
@@ -242,6 +259,7 @@ def sweep_policies(
     backend: str = "sim",
     runtime: Optional[object] = None,
     sim_overrides: Optional[Dict[str, object]] = None,
+    engine: Optional[str] = None,
 ) -> Dict[str, ScenarioResult]:
     """Run one scenario under every policy, one process per policy.
 
@@ -262,7 +280,7 @@ def sweep_policies(
     kwargs = dict(base_seed=base_seed, n_runs=n_runs,
                   stream_overrides=stream_overrides, t_max=t_max,
                   backend=backend, runtime=runtime,
-                  sim_overrides=sim_overrides)
+                  sim_overrides=sim_overrides, engine=engine)
 
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     try:

@@ -150,6 +150,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="inject a worker failure: kill worker IDX at "
                     "scenario time T seconds (sim and live backends; "
                     "in-flight messages requeue at the head, at-least-once)")
+    ap.add_argument("--engine", choices=("object", "numpy", "auto"),
+                    default=None,
+                    help="packing engine override: per-bin object packers, "
+                    "the array-backed numpy engine (decision-identical; "
+                    "fast on large fleets), or auto (numpy above the "
+                    "fleet-size threshold); default: the scenario's "
+                    "allocator config")
     ap.add_argument("--seed", type=int, default=0, help="base stream seed")
     ap.add_argument("--runs", type=int, default=None,
                     help="override the scenario's run count")
@@ -191,6 +198,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
         for flag, value in (("--policy", args.policy), ("--runs", args.runs),
                             ("--fail-worker", args.fail_worker),
+                            ("--engine", args.engine),
                             ("--check", args.check or None)):
             if value is not None:
                 print(f"note: {flag} does not apply to the serving backend "
@@ -246,7 +254,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     run_kwargs = dict(base_seed=args.seed, n_runs=n_runs,
                       stream_overrides=stream_overrides, t_max=t_max,
-                      backend=args.backend, sim_overrides=sim_overrides)
+                      backend=args.backend, sim_overrides=sim_overrides,
+                      engine=args.engine)
     if args.backend == "live":
         from ..runtime.live import RuntimeConfig
 

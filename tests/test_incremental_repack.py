@@ -1,0 +1,175 @@
+"""Incremental-repack pin: dirty-bin tracking must be invisible.
+
+``BinPackingManager`` with ``incremental=True`` refreshes only the bins
+whose loads changed since the previous decision (plus new slots and the
+previous placement frontier) instead of rebuilding the whole prefill
+matrix.  These tests drive randomized churn sequences — load perturbations,
+fleet growth, scale-down truncation, failure-style zeroing — and assert
+after *every* step that the incremental decisions are identical to a
+from-scratch full repack, and (for scalar fleets) to the trusted object
+packers.  A final pair of tests pins the dirty-fraction fallback and the
+run counters that expose which path fired.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import AllocatorConfig, BinPackingManager
+from repro.core.queues import HostRequest
+
+SCALAR_ALGOS = ("first-fit", "best-fit", "worst-fit", "next-fit")
+VECTOR_ALGOS = ("vector-first-fit", "vector-best-fit", "vector-next-fit",
+                "dominant-fit", "vector-ffd")
+
+
+def _mk_requests(rng, n):
+    return [
+        HostRequest("img", size_estimate=float(rng.uniform(0.05, 0.6)),
+                    ttl=3)
+        for _ in range(n)
+    ]
+
+
+def _run_pair(mgr_inc, mgr_full, t, reqs, loads):
+    """Run both managers on identical inputs; return the incremental run."""
+    run_inc = mgr_inc.run(t, copy.deepcopy(reqs), loads.copy())
+    run_full = mgr_full.run(t, copy.deepcopy(reqs), loads.copy())
+    assert (
+        [r.target_worker for r in run_inc.placements]
+        == [r.target_worker for r in run_full.placements]
+    ), f"t={t}: incremental placements diverge from full repack"
+    assert run_inc.num_bins == run_full.num_bins
+    assert run_inc.ideal_bins == run_full.ideal_bins
+    assert run_inc.target_workers == run_full.target_workers
+    np.testing.assert_array_equal(
+        np.asarray(run_inc.scheduled_load),
+        np.asarray(run_full.scheduled_load),
+        err_msg=f"t={t}: scheduled load matrices diverge",
+    )
+    return run_inc
+
+
+def _churn(rng, loads, cap=1.0):
+    """One random fleet mutation: perturb, grow, shrink, or zero (failure)."""
+    move = rng.integers(0, 4)
+    n = len(loads)
+    if move == 0 and n:  # perturb a few rows (completions / new pulls)
+        rows = rng.integers(0, n, size=max(1, n // 8))
+        loads[rows] = rng.uniform(0.0, cap, size=loads[rows].shape)
+    elif move == 1:  # scale-up: new empty slots appear
+        grown = np.zeros((n + int(rng.integers(1, 4)),) + loads.shape[1:])
+        grown[:n] = loads
+        loads = grown
+    elif move == 2 and n > 4:  # scale-down: trailing slots retired
+        loads = loads[: n - int(rng.integers(1, 3))].copy()
+    elif n:  # failure: a worker's load vanishes, its messages requeue
+        loads[rng.integers(0, n)] = 0.0
+    return loads
+
+
+@pytest.mark.parametrize("algo", SCALAR_ALGOS)
+def test_incremental_equals_full_repack_scalar_churn(algo):
+    rng = np.random.default_rng(hash(algo) % (2**32))
+    cfg = dict(algorithm=algo, engine="numpy", keep_idle_buffer=False)
+    mgr_inc = BinPackingManager(AllocatorConfig(incremental=True, **cfg))
+    mgr_full = BinPackingManager(AllocatorConfig(incremental=False, **cfg))
+    # the object packers are the ground truth on scalar fleets
+    mgr_obj = BinPackingManager(
+        AllocatorConfig(algorithm=algo, engine="object",
+                        keep_idle_buffer=False)
+    )
+    loads = rng.uniform(0.0, 1.0, size=12)
+    for step in range(30):
+        reqs = _mk_requests(rng, int(rng.integers(1, 8)))
+        run_inc = _run_pair(mgr_inc, mgr_full, float(step), reqs, loads)
+        run_obj = mgr_obj.run(float(step), copy.deepcopy(reqs),
+                              [float(u) for u in loads])
+        assert (
+            [r.target_worker for r in run_inc.placements]
+            == [r.target_worker for r in run_obj.placements]
+        ), f"{algo} step {step}: numpy diverges from object packer"
+        assert run_inc.num_bins == run_obj.num_bins
+        loads = _churn(rng, loads)
+    assert mgr_inc.incremental_runs > 0  # the fast path actually ran
+    assert mgr_full.incremental_runs == 0
+    assert mgr_full.full_repacks == 30
+
+
+@pytest.mark.parametrize("algo", VECTOR_ALGOS)
+def test_incremental_equals_full_repack_vector_churn(algo):
+    rng = np.random.default_rng(hash(algo) % (2**32))
+    cfg = dict(algorithm=algo, engine="numpy", keep_idle_buffer=False)
+    mgr_inc = BinPackingManager(AllocatorConfig(incremental=True, **cfg))
+    mgr_full = BinPackingManager(AllocatorConfig(incremental=False, **cfg))
+    loads = rng.uniform(0.0, 1.0, size=(10, 3))
+    for step in range(30):
+        reqs = _mk_requests(rng, int(rng.integers(1, 8)))
+        _run_pair(mgr_inc, mgr_full, float(step), reqs, loads)
+        loads = _churn(rng, loads)
+    assert mgr_inc.incremental_runs > 0
+
+
+def test_unchanged_fleet_reuses_cache_and_stays_identical():
+    """Back-to-back runs on identical loads: the second run dirties only
+    the previous placement frontier, and still matches a full repack."""
+    cfg = dict(algorithm="first-fit", engine="numpy",
+               keep_idle_buffer=False)
+    mgr_inc = BinPackingManager(AllocatorConfig(incremental=True, **cfg))
+    mgr_full = BinPackingManager(AllocatorConfig(incremental=False, **cfg))
+    rng = np.random.default_rng(42)
+    loads = rng.uniform(0.0, 0.8, size=50)
+    for t in range(5):
+        reqs = _mk_requests(rng, 6)
+        _run_pair(mgr_inc, mgr_full, float(t), reqs, loads)
+    assert mgr_inc.full_repacks == 1  # only the cold start
+    assert mgr_inc.incremental_runs == 4
+
+
+def test_dirty_fraction_fallback_triggers_full_repack():
+    """Churning more rows than ``dirty_fallback`` allows must abandon the
+    incremental path; churning fewer must keep it."""
+    rng = np.random.default_rng(3)
+    loads = rng.uniform(0.0, 0.8, size=40)
+
+    def mgr(fallback):
+        return BinPackingManager(AllocatorConfig(
+            algorithm="best-fit", engine="numpy", keep_idle_buffer=False,
+            incremental=True, dirty_fallback=fallback,
+        ))
+
+    picky, lenient = mgr(0.05), mgr(1.0)
+    for m in (picky, lenient):
+        m.run(0.0, _mk_requests(rng, 3), loads.copy())
+    assert picky.full_repacks == lenient.full_repacks == 1
+    # dirty half the fleet: 0.5 > 0.05 -> fallback; 0.5 <= 1.0 -> not
+    loads[: len(loads) // 2] = rng.uniform(0.0, 0.8, size=len(loads) // 2)
+    for m in (picky, lenient):
+        m.run(1.0, _mk_requests(rng, 3), loads.copy())
+    assert picky.full_repacks == 2 and picky.incremental_runs == 0
+    assert lenient.full_repacks == 1 and lenient.incremental_runs == 1
+
+
+def test_capacity_change_invalidates_cache():
+    """A capacity edit (AllocatorConfig.capacity) between runs must not
+    reuse a prefill clamped against the old capacity."""
+    cfg = AllocatorConfig(algorithm="first-fit", engine="numpy",
+                          keep_idle_buffer=False, incremental=True)
+    mgr = BinPackingManager(cfg)
+    rng = np.random.default_rng(9)
+    loads = rng.uniform(0.0, 2.0, size=30)  # some rows above capacity
+    mgr.run(0.0, _mk_requests(rng, 3), loads.copy())
+    cfg.capacity = 2.0  # live capacity edit
+    reqs = _mk_requests(rng, 3)
+    run = mgr.run(1.0, copy.deepcopy(reqs), loads.copy())
+    fresh = BinPackingManager(AllocatorConfig(
+        algorithm="first-fit", engine="numpy", keep_idle_buffer=False,
+        incremental=False, capacity=2.0,
+    )).run(1.0, copy.deepcopy(reqs), loads.copy())
+    assert (
+        [r.target_worker for r in run.placements]
+        == [r.target_worker for r in fresh.placements]
+    )
+    assert run.num_bins == fresh.num_bins
+    assert run.ideal_bins == fresh.ideal_bins

@@ -1,0 +1,313 @@
+"""Property suite pinning the numpy packing engine to the object packers.
+
+The ``NumpyPacker`` replaces trusted per-bin object code on the fleet-scale
+hot path, so every decision it makes must be index-for-index identical to
+the object packers — same assignments, same bins opened, and a bitwise-equal
+used matrix — for every policy in ``POLICIES``/``VECTOR_POLICIES``, over
+randomized item streams, capacities, and pre-filled bins.
+
+The seeded ``numpy.random`` loops below are the always-run pins (>= 200
+randomized cases per policy, as the scale work requires); the
+hypothesis-driven variants add minimized counterexamples when hypothesis is
+installed and skip cleanly via ``_hypothesis_compat`` when it is not.  The
+final section runs every registered scenario end to end under
+``engine="numpy"`` and asserts the ``SimResult`` time series are
+bit-identical to the object run.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.binpack import (
+    NUMPY_BIN_THRESHOLD,
+    Bin,
+    FirstFit,
+    Item,
+    NumpyPacker,
+    VectorBin,
+    VectorFirstFit,
+    VectorItem,
+    make_packer,
+)
+from repro.scenarios import (
+    POLICIES,
+    VECTOR_POLICIES,
+    get_scenario,
+    run_scenario,
+    scenario_names,
+)
+
+N_CASES = 200  # randomized cases per policy (acceptance floor: 200)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _object_used(packer, ndims):
+    """The object packer's bins as an (n, ndims) used matrix."""
+    if not packer.bins:
+        return np.empty((0, ndims), dtype=np.float64)
+    return np.asarray(
+        [np.atleast_1d(np.asarray(b.used, dtype=np.float64))
+         for b in packer.bins],
+        dtype=np.float64,
+    )
+
+
+def _check_scalar_case(policy, cap, prefill, sizes):
+    obj = make_packer(
+        policy, capacity=cap,
+        bins=[Bin(cap, used=float(u)) for u in prefill],
+    )
+    fast = make_packer(policy, capacity=cap, engine="numpy", used=prefill)
+    assert isinstance(fast, NumpyPacker)
+    a = [obj.pack_one(Item(float(s))) for s in sizes]
+    b = [fast.pack_one(Item(float(s))) for s in sizes]
+    assert a == b, f"{policy}: placements diverge"
+    np.testing.assert_array_equal(
+        _object_used(obj, 1), fast.used_matrix(),
+        err_msg=f"{policy}: used matrices diverge",
+    )
+
+
+def _check_vector_case(policy, cap, prefill, sizes, heuristic="first"):
+    cap_t = tuple(float(c) for c in cap)
+    kw = {"heuristic": heuristic} if policy == "vector-first-fit" else {}
+    obj = make_packer(
+        policy, capacity=cap_t,
+        bins=[VectorBin(cap_t, used=tuple(r)) for r in prefill], **kw,
+    )
+    fast = make_packer(
+        policy, capacity=cap_t, engine="numpy", used=prefill, **kw
+    )
+    assert isinstance(fast, NumpyPacker)
+    items = [VectorItem(tuple(r)) for r in sizes]
+    res_obj = obj.pack(items)
+    res_fast = fast.pack([VectorItem(tuple(r)) for r in sizes])
+    label = f"{policy}/{heuristic}"
+    assert res_obj.assignments == res_fast.assignments, (
+        f"{label}: placements diverge"
+    )
+    assert res_obj.opened == res_fast.opened
+    np.testing.assert_array_equal(
+        _object_used(obj, len(cap_t)), fast.used_matrix(),
+        err_msg=f"{label}: used matrices diverge",
+    )
+
+
+def _random_vector_case(rng, ndims):
+    cap = rng.uniform(0.4, 1.0, size=ndims)
+    prefill = rng.uniform(0.0, 1.0, size=(int(rng.integers(0, 6)), ndims))
+    prefill = prefill * cap
+    sizes = rng.uniform(0.0, 1.0, size=(int(rng.integers(1, 41)), ndims))
+    sizes = sizes * cap
+    # keep every item non-zero somewhere (the VectorItem contract) but
+    # sprinkle exact zeros into auxiliary dimensions — the degenerate case
+    # a feasibility mask gets wrong first
+    sizes[:, 0] = np.maximum(sizes[:, 0], 1e-3)
+    if ndims > 1:
+        zero = rng.random(size=(len(sizes), ndims - 1)) < 0.25
+        sizes[:, 1:] = np.where(zero, 0.0, sizes[:, 1:])
+    return cap, prefill, sizes
+
+
+# ---------------------------------------------------------------------------
+# Seeded randomized equivalence (always run; >= 200 cases per policy)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_scalar_equivalence_randomized(policy):
+    rng = np.random.default_rng(hash(policy) % (2**32))
+    for _ in range(N_CASES):
+        cap = float(rng.uniform(0.4, 1.0))
+        prefill = rng.uniform(0.0, cap, size=int(rng.integers(0, 6)))
+        sizes = rng.uniform(1e-3, cap, size=int(rng.integers(1, 41)))
+        _check_scalar_case(policy, cap, prefill, sizes)
+
+
+@pytest.mark.parametrize("policy", VECTOR_POLICIES)
+@pytest.mark.parametrize("ndims", [1, 3])
+def test_vector_equivalence_randomized(policy, ndims):
+    rng = np.random.default_rng((hash(policy) + ndims) % (2**32))
+    for _ in range(N_CASES):
+        cap, prefill, sizes = _random_vector_case(rng, ndims)
+        _check_vector_case(policy, cap, prefill, sizes)
+
+
+@pytest.mark.parametrize("heuristic", ["dot", "l2"])
+def test_vector_first_fit_heuristics_equivalence(heuristic):
+    rng = np.random.default_rng(hash(heuristic) % (2**32))
+    for _ in range(N_CASES):
+        cap, prefill, sizes = _random_vector_case(rng, 3)
+        _check_vector_case(
+            "vector-first-fit", cap, prefill, sizes, heuristic=heuristic
+        )
+
+
+# ---------------------------------------------------------------------------
+# Degenerate cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", VECTOR_POLICIES)
+def test_zero_size_auxiliary_dimensions(policy):
+    """Items with exact zeros in every dimension but one."""
+    cap = (1.0, 1.0, 1.0)
+    sizes = [(0.4, 0.0, 0.0), (0.4, 0.0, 0.0), (0.4, 0.0, 0.0),
+             (0.001, 0.0, 0.0), (0.9, 0.0, 0.0)]
+    _check_vector_case(policy, cap, np.empty((0, 3)), np.asarray(sizes))
+
+
+@pytest.mark.parametrize("policy", VECTOR_POLICIES)
+def test_bin_full_in_one_dimension(policy):
+    """A pre-filled bin exactly full in one dimension with slack in the
+    others: any item demanding that dimension must skip it on both
+    engines; a zero-demand item may still land there."""
+    cap = (1.0, 1.0)
+    prefill = np.asarray([[0.1, 1.0]])  # mem exactly full
+    sizes = np.asarray([[0.2, 0.1], [0.3, 0.0], [0.2, 0.1]])
+    _check_vector_case(policy, cap, prefill, sizes)
+
+
+def test_one_dim_vector_matches_scalar_path():
+    """1-D vector packing is the scalar path: identical assignments from
+    scalar first-fit and vector-first-fit on both engines."""
+    rng = np.random.default_rng(7)
+    sizes = rng.uniform(0.05, 1.0, size=50)
+    results = []
+    for name, engine in [("first-fit", "object"), ("first-fit", "numpy"),
+                         ("vector-first-fit", "object"),
+                         ("vector-first-fit", "numpy")]:
+        p = make_packer(name, capacity=1.0, engine=engine)
+        if name == "first-fit":
+            results.append([p.pack_one(Item(float(s))) for s in sizes])
+        else:
+            results.append(
+                [p.pack_one(VectorItem((float(s),))) for s in sizes]
+            )
+    assert results[0] == results[1] == results[2] == results[3]
+
+
+def test_numpy_oversize_validation_matches_object():
+    fast = make_packer("first-fit", capacity=0.5, engine="numpy")
+    with pytest.raises(ValueError, match="exceeds bin capacity"):
+        fast.pack_one(Item(0.8))
+    vfast = make_packer("vector-first-fit", capacity=(0.5, 1.0),
+                        engine="numpy")
+    with pytest.raises(ValueError, match="exceed bin capacity"):
+        vfast.pack_one(VectorItem((0.8, 0.1)))
+    ffd = make_packer("vector-ffd", capacity=(0.5, 1.0), engine="numpy")
+    with pytest.raises(ValueError, match="exceed bin capacity"):
+        ffd.pack([VectorItem((0.8, 0.1))])
+    with pytest.raises(TypeError, match="offline"):
+        ffd.pack_one(VectorItem((0.1, 0.1)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variants (skip cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.lists(st.floats(min_value=0.01, max_value=1.0),
+             min_size=1, max_size=60),
+    st.sampled_from(POLICIES),
+)
+@settings(max_examples=100, deadline=None)
+def test_scalar_equivalence_hypothesis(sizes, policy):
+    _check_scalar_case(policy, 1.0, np.empty(0), np.asarray(sizes))
+
+
+@given(
+    st.lists(
+        st.tuples(st.floats(min_value=0.01, max_value=1.0),
+                  st.floats(min_value=0.0, max_value=1.0)),
+        min_size=1, max_size=60,
+    ),
+    st.sampled_from(VECTOR_POLICIES),
+)
+@settings(max_examples=100, deadline=None)
+def test_vector_equivalence_hypothesis(pairs, policy):
+    _check_vector_case(
+        policy, (1.0, 1.0), np.empty((0, 2)), np.asarray(pairs)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Factory / engine selection
+# ---------------------------------------------------------------------------
+
+
+def test_engine_numpy_resolves_every_swept_policy():
+    for name in (*POLICIES, *VECTOR_POLICIES):
+        p = make_packer(name, capacity=1.0, engine="numpy")
+        assert isinstance(p, NumpyPacker) and p.name == name
+
+
+def test_engine_numpy_rejects_unimplemented_policies():
+    with pytest.raises(ValueError, match="no numpy engine"):
+        make_packer("harmonic", engine="numpy")
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown packing engine"):
+        make_packer("first-fit", engine="fortran")
+
+
+def test_auto_engine_switches_on_prefilled_bin_count():
+    small = make_packer("first-fit", engine="auto",
+                        used=np.full(NUMPY_BIN_THRESHOLD - 1, 0.1))
+    big = make_packer("first-fit", engine="auto",
+                      used=np.full(NUMPY_BIN_THRESHOLD, 0.1))
+    assert isinstance(small, FirstFit)
+    assert isinstance(big, NumpyPacker)
+    # the object fallback keeps the used= prefill (bins materialized)
+    assert len(small.bins) == NUMPY_BIN_THRESHOLD - 1
+    assert small.bins[0].used == pytest.approx(0.1)
+    vec = make_packer("vector-first-fit", engine="auto",
+                      capacity=(1.0, 1.0), used=np.full((4, 2), 0.2))
+    assert isinstance(vec, VectorFirstFit)
+    assert vec.bins[0].used == (pytest.approx(0.2), pytest.approx(0.2))
+
+
+def test_numpy_reset_and_bins_materialization():
+    p = make_packer("vector-best-fit", capacity=(1.0, 0.5), engine="numpy",
+                    used=np.asarray([[0.3, 0.1]]))
+    assert p.n_bins == 1
+    bins = p.bins
+    assert isinstance(bins[0], VectorBin)
+    assert bins[0].used == (pytest.approx(0.3), pytest.approx(0.1))
+    p.reset()
+    assert p.n_bins == 0 and p.used_matrix().shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Registered-scenario regression pin: engine="numpy" end to end
+# ---------------------------------------------------------------------------
+
+ARRAY_FIELDS = ("times", "measured_cpu", "scheduled_cpu", "queue_len",
+                "active_workers", "target_workers", "ideal_bins", "pe_count")
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_registered_scenario_numpy_engine_bit_identical(name):
+    """The fast engine can become the sim default only if every pinned
+    scenario's time series survives the swap bit-for-bit."""
+    scn = get_scenario(name)
+    kwargs = dict(n_runs=1, stream_overrides=scn.smoke_overrides,
+                  t_max=scn.smoke_t_max)
+    a = run_scenario(scn, engine="object", **kwargs).final
+    b = run_scenario(scn, engine="numpy", **kwargs).final
+    assert a.total > 0 and a.completed == a.total
+    for f in ARRAY_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype, f"{name}/{f}: dtype diverges"
+        np.testing.assert_array_equal(x, y, err_msg=f"{name}/{f}")
+    if a.scheduled_res is not None:
+        np.testing.assert_array_equal(a.scheduled_res, b.scheduled_res)
+    assert a.makespan == b.makespan
+    assert a.requeued == b.requeued

@@ -334,13 +334,18 @@ def test_lifecycle_defers_scale_down_while_booting():
                           poll_interval=cfg.dt)
         lifecycle = Lifecycle(pool, cfg, clock)
         clock.start()
-        lifecycle.scale_workers(5)
-        pool.workers[0].state = WorkerState.ACTIVE  # one boot completed
-        lifecycle.scale_workers(2)  # four still BOOTING -> defer scale-down
+        lifecycle.scale_workers(1)   # worker 0 boots, ready at t=50
+        pool.promote_booted(50.0)    # its boot completes
+        lifecycle.nominal_t = 50.0
+        lifecycle.scale_workers(5)   # four more boot, ready at t=100
+        lifecycle.scale_workers(2)   # four still BOOTING -> defer scale-down
         assert pool.workers[0].state is WorkerState.ACTIVE
+        assert all(
+            w.state is WorkerState.BOOTING for w in pool.workers[1:]
+        )
         # once everything is ACTIVE the scale-down proceeds, highest first
-        for w in pool.workers:
-            w.state = WorkerState.ACTIVE
+        pool.promote_booted(100.0)
+        lifecycle.nominal_t = 100.0
         lifecycle.scale_workers(2)
         assert [w.state for w in pool.workers] == [
             WorkerState.ACTIVE, WorkerState.ACTIVE, WorkerState.OFF,
@@ -368,21 +373,23 @@ def test_lifecycle_stale_boot_does_not_block_scale_down():
                           poll_interval=cfg.dt)
         lifecycle = Lifecycle(pool, cfg, clock)
         clock.start()
-        lifecycle.scale_workers(3)
-        for w in pool.workers[:2]:
-            w.state = WorkerState.ACTIVE
-        # worker 2 stays BOOTING with its ready time already in the past —
-        # the stale state the scoped guard must see through
-        pool.workers[2].ready_t = clock.now() - 1.0
+        lifecycle.scale_workers(2)   # workers 0-1 boot, ready at t=5
+        pool.promote_booted(5.0)
+        lifecycle.nominal_t = 5.0
+        lifecycle.scale_workers(3)   # worker 2 boots, ready at t=10
+        # a later tick where worker 2 was never promoted (e.g. orphaned
+        # by a failure-driven kill/reboot cycle): its ready time is in
+        # the past — the stale state the scoped guard must see through
+        lifecycle.nominal_t = 20.0
         lifecycle.scale_workers(2)
         assert [w.state for w in pool.workers] == [
             WorkerState.ACTIVE, WorkerState.OFF, WorkerState.BOOTING,
         ]
         # a boot genuinely in flight still defers the scale-down
-        pool.workers[2].ready_t = clock.now() + cfg.worker_boot_delay
-        pool.workers[1].state = WorkerState.ACTIVE
+        lifecycle.scale_workers(3)   # slot 1 reboots, ready at t=25
         lifecycle.scale_workers(2)
-        assert pool.workers[1].state is WorkerState.ACTIVE
+        assert pool.workers[1].state is WorkerState.BOOTING
+        assert pool.workers[0].state is WorkerState.ACTIVE
         return True
 
     assert asyncio.run(go())

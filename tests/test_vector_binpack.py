@@ -16,6 +16,7 @@ from repro.core.binpack import (
     VectorItem,
     VectorNextFit,
     is_vector_policy,
+    lower_bound,
     make_packer,
     vector_equivalent,
     vector_lower_bound,
@@ -127,6 +128,33 @@ def test_oversized_vector_item_raises():
     vff = VectorFirstFit((0.5, 1.0))
     with pytest.raises(ValueError, match="exceed bin capacity"):
         vff.pack_one(VectorItem((0.8, 0.1)))
+
+
+def test_lower_bound_edge_cases():
+    """Edges surfaced by the packer-equivalence suite: empty input needs 0
+    bins, a tiny-but-real total still needs 1 (the epsilon slack must not
+    round it to 0), an oversized single item raises the bound past 1, and
+    a non-positive capacity is a caller error, not a ZeroDivisionError."""
+    assert lower_bound([]) == 0
+    assert lower_bound([1e-12]) == 1
+    assert lower_bound([1.5], 1.0) == 2
+    assert lower_bound([0.3], 0.3) == 1  # exact fit stays at 1
+    with pytest.raises(ValueError, match="must be positive"):
+        lower_bound([0.5], 0.0)
+    with pytest.raises(ValueError, match="must be positive"):
+        lower_bound([0.5], -1.0)
+
+
+def test_vector_lower_bound_edge_cases():
+    assert vector_lower_bound([(1e-12, 0.0)], (1.0, 1.0)) == 1
+    assert vector_lower_bound([(0.5, 2.5)], (1.0, 1.0)) == 3  # oversize item
+    # items may carry *fewer* dims than the capacity (zero demand there)...
+    assert vector_lower_bound([(0.5,)], (1.0, 1.0)) == 1
+    # ...but never more: extra demand must not silently vanish
+    with pytest.raises(ValueError, match="more dimensions"):
+        vector_lower_bound([(0.1, 0.2, 0.3)], (1.0, 1.0))
+    with pytest.raises(ValueError, match="must be positive"):
+        vector_lower_bound([(0.1, 0.1)], (1.0, 0.0))
 
 
 def test_vector_lower_bound_is_dominant_dimension():
