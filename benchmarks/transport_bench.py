@@ -1,0 +1,199 @@
+"""Transport cost: in-process asyncio vs. OS-process workers, head to head.
+
+Runs the same scenario through the live runtime twice — once per
+transport (``InProcTransport`` vs. ``MultiprocTransport``) — and records
+what the process promotion actually costs and buys:
+
+  - **messages/s** — completed messages per wall second on each transport
+    (the multiproc column pays pickling + queue hops + OS scheduling);
+  - **end-to-end latency** — per-message ``done - arrival`` in scenario
+    seconds, p50/p95/p99 (IPC latency shows up here if it is ever large
+    relative to the scheduling delays);
+  - **serialization** — bytes and milliseconds per message over the data
+    channel, both directions (the multiproc transport's explicit pickle
+    accounting; zero by construction for inproc);
+  - **profiler drift** — emulated model CPU vs. the *real* per-message
+    thread CPU measured inside the worker processes, in percentage
+    points of one worker — the measured-vs-emulated gap the process
+    backend exists to expose (``measurement="os"`` would feed the real
+    samples to the profiler instead; this benchmark keeps the default so
+    both columns pack identically and the drift is a pure observation).
+
+Writes ``BENCH_transport.json``:
+
+    {
+      "schema": "BENCH_transport/v1",
+      "smoke": false, "scenario": "microscopy", "time_scale": ...,
+      "payload": "sleep",
+      "transports": {
+        "inproc":    {"completed": ..., "messages_per_s": ...,
+                      "latency_s": {...}, "wall_s": ...},
+        "multiproc": {..., "serialization": {"bytes_per_msg": ...,
+                      "ms_per_msg": ..., "bytes_out": ..., "bytes_in": ...},
+                      "profiler_drift_pp": ..., "real_cpu_core_s": ...,
+                      "emulated_cpu_core_s": ..., "proc_cpu_s": ...,
+                      "workers_spawned": ...}
+      },
+      "comparison": {"throughput_ratio": ..., "latency_p50_ratio": ...},
+      "meta": {...}
+    }
+
+Exits nonzero if either transport completes < 90% of the stream — a
+transport that drops work is broken, not slow.
+
+Usage:
+    PYTHONPATH=src python benchmarks/transport_bench.py [--smoke] \
+        [--scenario microscopy] [--time-scale 0.01] [--payload sleep] \
+        [--out BENCH_transport.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime import RuntimeConfig, run_live
+from repro.scenarios import get_scenario
+
+
+def bench_transport(
+    name: str, transport: str, *, smoke: bool, time_scale: float,
+    payload: str,
+) -> Dict:
+    scn = get_scenario(name)
+    cfg = scn.sim_config()
+    overrides: Dict = {}
+    if smoke:
+        overrides = dict(scn.smoke_overrides or {})
+        if scn.smoke_t_max is not None:
+            cfg.t_max = scn.smoke_t_max
+
+    stream = scn.make_stream(0, **overrides)
+    stats: Dict = {}
+    res = run_live(
+        stream, cfg, irm_config=scn.irm_config(),
+        runtime=RuntimeConfig(time_scale=time_scale, payload=payload,
+                              transport=transport),
+        stats=stats,
+    )
+    done = [m for m in res.messages if m.done_t >= 0]
+    lat = np.array([m.done_t - m.arrival for m in done]) if done \
+        else np.zeros(1)
+    t = stats["transport"]
+    row = {
+        "completed": int(res.completed),
+        "total": int(res.total),
+        "requeued": int(res.requeued),
+        "wall_s": float(stats["wall_s"]),
+        "messages_per_s": float(stats["messages_per_s"]),
+        "makespan_s": float(res.makespan),
+        "latency_s": {
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99)),
+        },
+        "max_target_workers": int(res.target_workers.max()),
+        "peak_pe_count": int(res.pe_count.max()),
+    }
+    if transport == "multiproc":
+        row["serialization"] = {
+            "bytes_per_msg": float(t["ser_bytes_per_msg"]),
+            "ms_per_msg": float(t["ser_ms_per_msg"]),
+            "bytes_out": int(t["data_bytes_out"]),
+            "bytes_in": int(t["data_bytes_in"]),
+            "msgs_out": int(t["data_msgs_out"]),
+            "msgs_in": int(t["data_msgs_in"]),
+        }
+        row["profiler_drift_pp"] = float(t["profiler_drift_pp"])
+        row["real_cpu_core_s"] = float(t["real_cpu_core_s"])
+        row["emulated_cpu_core_s"] = float(t["emulated_cpu_core_s"])
+        row["proc_cpu_s"] = float(t["proc_cpu_s"])
+        row["workers_spawned"] = int(t["workers_spawned"])
+        row["start_method"] = t["start_method"]
+    return row
+
+
+def run(out: str = "BENCH_transport.json", *, smoke: bool = False,
+        scenario: str = "microscopy", time_scale: float = 0.01,
+        payload: str = "sleep") -> Dict:
+    result = {
+        "schema": "BENCH_transport/v1",
+        "smoke": bool(smoke),
+        "scenario": scenario,
+        "time_scale": time_scale,
+        "payload": payload,
+        "transports": {},
+        "meta": {
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "platform": platform.platform(),
+        },
+    }
+    for transport in ("inproc", "multiproc"):
+        row = bench_transport(scenario, transport, smoke=smoke,
+                              time_scale=time_scale, payload=payload)
+        result["transports"][transport] = row
+        extra = ""
+        if transport == "multiproc":
+            ser = row["serialization"]
+            extra = (f" ser={ser['bytes_per_msg']:.0f}B/"
+                     f"{ser['ms_per_msg']:.3f}ms per msg "
+                     f"drift={row['profiler_drift_pp']:+.1f}pp")
+        print(
+            f"{transport:<10} done={row['completed']:>4}/{row['total']:<4} "
+            f"wall={row['wall_s']:6.2f}s "
+            f"msgs/s={row['messages_per_s']:7.1f} "
+            f"lat p50/p99={row['latency_s']['p50']:6.1f}/"
+            f"{row['latency_s']['p99']:6.1f}s{extra}"
+        )
+    ip = result["transports"]["inproc"]
+    mp = result["transports"]["multiproc"]
+    result["comparison"] = {
+        "throughput_ratio": mp["messages_per_s"] / max(ip["messages_per_s"],
+                                                       1e-9),
+        "latency_p50_ratio": mp["latency_s"]["p50"] / max(
+            ip["latency_s"]["p50"], 1e-9),
+        "profiler_drift_pp": mp["profiler_drift_pp"],
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nwrote {out}")
+    ok = all(r["completed"] >= 0.9 * r["total"]
+             for r in result["transports"].values())
+    if not ok:
+        print("ERROR: a transport completed < 90% of its stream",
+              file=sys.stderr)
+    return result
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/transport_bench.py",
+        description="Head-to-head cost of inproc vs. multiproc transports.",
+    )
+    ap.add_argument("--out", default="BENCH_transport.json",
+                    help="output JSON path (default: ./BENCH_transport.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long run on the scenario's smoke overrides")
+    ap.add_argument("--scenario", default="microscopy",
+                    help="registered scenario name (default: microscopy)")
+    ap.add_argument("--time-scale", type=float, default=0.01,
+                    help="wall seconds per scenario second")
+    ap.add_argument("--payload", default="sleep",
+                    help="PE payload: sleep (calibrated) or jax (real kernel)")
+    args = ap.parse_args(argv)
+    result = run(args.out, smoke=args.smoke, scenario=args.scenario,
+                 time_scale=args.time_scale, payload=args.payload)
+    return 0 if all(
+        r["completed"] >= 0.9 * r["total"]
+        for r in result["transports"].values()
+    ) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

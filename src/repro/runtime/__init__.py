@@ -7,6 +7,12 @@ payloads, lifecycle actuation with boot delays — that the *unmodified*
 IRM schedules.  ``run_live`` mirrors ``core.sim.simulate`` and returns a
 ``SimResult``, so every scenario, summary metric, and expectation check
 runs on either backend (``run_scenario(..., backend="live")``).
+
+Master↔worker communication goes through an explicit ``Transport``
+(``runtime.transport``): ``InProcTransport`` keeps the original
+zero-copy asyncio semantics, ``MultiprocTransport`` promotes each worker
+to an OS process behind pickled command/data queues
+(``run_scenario(..., backend="multiproc")``).
 """
 
 from .clock import ScaledClock
@@ -15,6 +21,12 @@ from .live import LiveCluster, RuntimeConfig, run_live
 from .master import Master
 from .payloads import JaxPayload, SleepPayload, make_payload
 from .trace import TraceRecorder
+from .transport import (
+    InProcTransport,
+    MultiprocTransport,
+    Transport,
+    make_transport,
+)
 from .worker import LivePE, LiveWorker, WorkerPool
 
 __all__ = [
@@ -28,6 +40,10 @@ __all__ = [
     "SleepPayload",
     "make_payload",
     "TraceRecorder",
+    "Transport",
+    "InProcTransport",
+    "MultiprocTransport",
+    "make_transport",
     "LivePE",
     "LiveWorker",
     "WorkerPool",

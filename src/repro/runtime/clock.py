@@ -17,7 +17,8 @@ changing the scheduling dynamics under test.
 from __future__ import annotations
 
 import asyncio
-from typing import Optional
+import time
+from typing import Optional, Tuple
 
 __all__ = ["ScaledClock"]
 
@@ -36,11 +37,23 @@ class ScaledClock:
         self.time_scale = float(time_scale)
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._t0: float = 0.0
+        self._mono0: float = 0.0
 
     def start(self) -> None:
         """Anchor virtual t=0 at the current loop time."""
         self._loop = asyncio.get_running_loop()
         self._t0 = self._loop.time()
+        # cross-process anchor: CLOCK_MONOTONIC is system-wide, so a worker
+        # OS process can reconstruct this clock from (mono0, time_scale)
+        # and stamp messages on the same scenario time base (see
+        # ``transport.MultiprocTransport``)
+        self._mono0 = time.monotonic()
+
+    def anchor(self) -> Tuple[float, float]:
+        """(monotonic t=0, time_scale) — enough to rebuild the clock in
+        another process via ``(time.monotonic() - mono0) / time_scale``."""
+        assert self._loop is not None, "ScaledClock.start() not called"
+        return self._mono0, self.time_scale
 
     def now(self) -> float:
         """Scenario seconds elapsed since ``start()``."""

@@ -45,6 +45,7 @@ from .lifecycle import Lifecycle
 from .master import Master
 from .payloads import make_payload
 from .trace import TraceRecorder, measure_workers
+from .transport import make_transport
 from .worker import WorkerPool
 
 __all__ = ["RuntimeConfig", "LiveCluster", "run_live"]
@@ -59,6 +60,21 @@ class RuntimeConfig:
     # payload executed per message: "sleep" (calibrated) or "jax" (real kernel)
     payload: str = "sleep"
     payload_kwargs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    # where workers physically run: "inproc" (asyncio tasks on the master's
+    # loop — zero-copy, the original backend) or "multiproc" (each worker a
+    # real OS process with command/data queues; messages cross a pickle
+    # boundary and per-worker CPU is *measured*, not emulated)
+    transport: str = "inproc"
+    transport_kwargs: Dict[str, object] = dataclasses.field(
+        default_factory=dict
+    )
+    # what the profiler learns from on a multiproc transport: "emulated"
+    # keeps the simulator's CPU-draw model (so packing decisions stay on
+    # the sim's scale — the parity suites' contract) while real OS numbers
+    # are still collected for the drift ledger; "os" feeds the real
+    # measurements (time.thread_time per message) to the unmodified
+    # MasterProfiler instead, making the drift *act* on decisions
+    measurement: str = "emulated"
     # how often a vector-gated idle PE re-checks the blocked head (scenario
     # seconds); None → the control dt
     poll_interval: Optional[float] = None
@@ -202,7 +218,24 @@ async def _drive(
     # jit cache at init, and that wall time must not burn virtual time
     payload = make_payload(rt.payload, **rt.payload_kwargs)
     poll = rt.poll_interval if rt.poll_interval is not None else cfg.dt
-    pool = WorkerPool(cfg, master, clock, payload, poll_interval=poll)
+    if rt.measurement not in ("emulated", "os"):
+        raise ValueError(
+            f"measurement must be 'emulated' or 'os', got {rt.measurement!r}"
+        )
+    tkwargs = dict(rt.transport_kwargs)
+    if rt.transport == "multiproc":
+        tkwargs.setdefault("measurement", rt.measurement)
+    elif rt.measurement != "emulated":
+        raise ValueError(
+            "measurement='os' requires transport='multiproc' (the in-process"
+            " backend has no OS boundary to measure)"
+        )
+    transport = make_transport(rt.transport, **tkwargs)
+    if hasattr(transport, "set_payload_spec"):
+        # process-backed workers build their own payload instance
+        transport.set_payload_spec(rt.payload, rt.payload_kwargs)
+    pool = WorkerPool(cfg, master, clock, payload, poll_interval=poll,
+                      transport=transport)
     lifecycle = Lifecycle(pool, cfg, clock)
     cluster = LiveCluster(cfg, irm, master, pool, lifecycle)
     recorder = TraceRecorder(cfg)
@@ -210,6 +243,7 @@ async def _drive(
     dims = tuple(cfg.resource_dims)
 
     clock.start()
+    transport.connect()  # data-channel consumer needs the running loop
     feeder = asyncio.get_running_loop().create_task(
         _arrival_feed(stream, master, clock), name="arrival-feed"
     )
@@ -233,8 +267,12 @@ async def _drive(
                 lifecycle.kill_worker(fail_at[0])
                 fail_at = None
             pool.promote_booted(t)
+            # under measurement="os" the transport feeds real per-message
+            # CPU to the probes; the emulated draws are still recorded in
+            # the trace (drift stays observable) but must not double-feed
             measured_cpu, dim_measure = measure_workers(
-                pool.workers, cfg, rng, dims
+                pool.workers, cfg, rng, dims,
+                accumulate=rt.measurement == "emulated",
             )
             if t - last_report_t >= cfg.report_interval:
                 for w in pool.workers:
@@ -294,6 +332,7 @@ async def _drive(
             irm_step_ms_p50=float(np.percentile(arr, 50)),
             irm_step_ms_p99=float(np.percentile(arr, 99)),
             messages_per_s=len(master.completed) / max(wall_s, 1e-9),
+            transport=transport.stats(),
         )
     return recorder.finalize(
         completed=len(master.completed),

@@ -16,6 +16,10 @@ Two built-ins:
 
 Payloads resolve by name through ``make_payload`` so scenarios/CLI can
 select them (``--payload jax``), mirroring ``core.binpack.make_packer``.
+Each payload also exposes ``run_sync(msg, time_scale)``, the blocking
+variant a process-backed transport executes on its worker-side PE threads
+(``runtime.transport.MultiprocTransport``) — there the payload *is* the
+worker's real, measurable CPU.
 """
 
 from __future__ import annotations
@@ -34,6 +38,11 @@ class SleepPayload:
 
     async def __call__(self, msg, clock) -> None:
         await clock.sleep(msg.duration)
+
+    def run_sync(self, msg, time_scale: float) -> None:
+        """Blocking variant for a transport's worker-process PE thread."""
+        if msg.duration > 0:
+            time.sleep(msg.duration * time_scale)
 
 
 class JaxPayload:
@@ -77,6 +86,16 @@ class JaxPayload:
         await loop.run_in_executor(None, self._compute)
         spent_virtual = (time.perf_counter() - wall0) / clock.time_scale
         await clock.sleep(msg.duration - spent_virtual)
+
+    def run_sync(self, msg, time_scale: float) -> None:
+        """Blocking variant for a transport's worker-process PE thread:
+        the kernel runs on the PE thread itself (that *is* the worker's
+        CPU now), then pads to the message's calibrated duration."""
+        wall0 = time.perf_counter()
+        self._compute()
+        remaining = msg.duration * time_scale - (time.perf_counter() - wall0)
+        if remaining > 0:
+            time.sleep(remaining)
 
 
 PAYLOADS: Dict[str, Callable[[], object]] = {

@@ -36,6 +36,7 @@ def measure_workers(
     cfg: SimConfig,
     rng: np.random.Generator,
     dims: Tuple[str, ...],
+    accumulate: bool = True,
 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
     """Instantaneous measured usage per worker, accumulated into probes.
 
@@ -43,6 +44,12 @@ def measure_workers(
     fraction per worker slot and ``dim_rows`` is the (n_workers, D)
     per-dimension matrix in vector mode (``None`` on the scalar path).
     Same draw model and probe accumulation as the simulator's ``measure``.
+
+    ``accumulate=False`` records the emulated trace rows without feeding
+    the probes — used when a transport supplies *real* OS measurements to
+    the profiler instead (``RuntimeConfig.measurement="os"``), so the
+    emulated draws stay visible in the trace for drift comparison but
+    never reach the learning path.
     """
     multi = len(dims) > 1
     D = len(dims)
@@ -76,13 +83,14 @@ def measure_workers(
                 elif pe.state is idle:
                     vec[0] = idle_draw / cores_per_worker
                 totals = totals + vec
-                img = pe.image
-                if img in acc:
-                    acc[img] = acc[img] + vec
-                    counts[img] += 1
-                else:
-                    acc[img] = vec
-                    counts[img] = 1
+                if accumulate:
+                    img = pe.image
+                    if img in acc:
+                        acc[img] = acc[img] + vec
+                        counts[img] += 1
+                    else:
+                        acc[img] = vec
+                        counts[img] = 1
             clipped = np.minimum(totals, 1.0)
             dim_out[w.idx] = clipped
             out[w.idx] = clipped[0]
@@ -100,13 +108,14 @@ def measure_workers(
                 else:
                     draw = 0.0
                 cores += draw
-                img = pe.image
-                if img in acc:
-                    acc[img] += draw / cores_per_worker
-                    counts[img] += 1
-                else:
-                    acc[img] = draw / cores_per_worker
-                    counts[img] = 1
+                if accumulate:
+                    img = pe.image
+                    if img in acc:
+                        acc[img] += draw / cores_per_worker
+                        counts[img] += 1
+                    else:
+                        acc[img] = draw / cores_per_worker
+                        counts[img] = 1
             u = cores / cores_per_worker
             out[w.idx] = u if u < 1.0 else 1.0
     return out, dim_out

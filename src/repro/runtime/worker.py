@@ -1,17 +1,26 @@
-"""Live workers: asyncio tasks hosting processing elements.
+"""Live workers: slot bookkeeping over a pluggable Transport.
 
 A ``LiveWorker`` models one worker VM (boot delay, per-image probe,
-hosting capacity in resource fractions); each PE it hosts is a real
-asyncio task running the pull-execute loop the paper describes:
+hosting capacity in resource fractions); each PE it hosts runs the
+pull-execute loop the paper describes:
 
     start delay → idle → P2P pull from the master → execute payload →
     idle → ... → idle-timeout self-termination
 
+*Where* that loop physically runs is the transport's business
+(``runtime.transport``): an asyncio task on the master's own loop
+(``InProcTransport`` — the original backend, bit-identical) or a thread
+inside a separate worker OS process (``MultiprocTransport``).  The pool
+itself is transport-blind: it owns the worker slots, their state indices,
+and the ``LivePE`` objects every observer reads — for a process-backed
+worker those are master-side *mirrors* kept current by data-channel
+events, but the observation code cannot tell the difference.
+
 State enums are shared with the simulator (``core.sim.PEState`` /
 ``WorkerState``) so observation code — scheduled-load views, measurement,
-trace recording — reads both backends with identical logic.  All state
+trace recording — reads all backends with identical logic.  All state
 mutation happens on the event loop thread; payload *compute* may run in
-executor threads (see ``payloads.JaxPayload``) but completion bookkeeping
+executor threads or worker processes, but completion bookkeeping
 re-enters the loop.
 
 Vector mode: non-CPU dimensions are rigid, so an idle PE only pulls while
@@ -24,10 +33,9 @@ blocks rather than being skipped, exactly as in the simulator.
 
 from __future__ import annotations
 
-import asyncio
 import heapq
 from bisect import insort
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from ..core.profiler import WorkerProbe
 from ..core.queues import HostRequest
@@ -35,6 +43,7 @@ from ..core.sim import PEState, SimConfig, WorkerState
 from ..core.workloads import Message
 from .clock import ScaledClock
 from .master import Master
+from .transport import InProcTransport, Transport
 
 __all__ = ["LivePE", "LiveWorker", "WorkerPool", "live_worker_fits_message"]
 
@@ -87,7 +96,7 @@ class LiveWorker:
 
 
 class WorkerPool:
-    """Hosts workers and runs their PEs as asyncio tasks."""
+    """Hosts worker slots; their PEs run wherever the transport puts them."""
 
     def __init__(
         self,
@@ -96,6 +105,7 @@ class WorkerPool:
         clock: ScaledClock,
         payload,
         poll_interval: float,
+        transport: Optional[Transport] = None,
     ):
         self.cfg = cfg
         self.master = master
@@ -104,11 +114,12 @@ class WorkerPool:
         # how often a gated (vector-blocked) idle PE re-checks the head,
         # in scenario seconds
         self.poll_interval = poll_interval
+        self.transport = transport if transport is not None else InProcTransport()
+        self.transport.bind(self)
         self.workers: List[LiveWorker] = []
         self._dims = tuple(cfg.resource_dims)
         self._multi = len(self._dims) > 1
         self._pe_uid = 0
-        self._tasks: Set[asyncio.Task] = set()
         # Fleet-scale indices, mirroring ``SimCluster``'s: every state
         # transition runs through the pool so per-tick queries
         # (promote_booted, n_alive, pe_count, the lifecycle's anti-churn
@@ -161,6 +172,9 @@ class WorkerPool:
             self._booting[w.idx] = w.ready_t
         else:  # zero boot delay: born ACTIVE
             insort(self._active_idx, w.idx)
+        # provision the backing resource now so it overlaps the boot delay
+        # (a process transport forks here; in-process this is a no-op)
+        self.transport.start_worker(w)
         return w
 
     def lowest_off_slot(self) -> Optional[LiveWorker]:
@@ -187,6 +201,7 @@ class WorkerPool:
         w.ready_t = ready_t
         self._booting[w.idx] = ready_t
         self._n_alive += 1
+        self.transport.start_worker(w)
 
     def deactivate(self, w: LiveWorker) -> None:
         """ACTIVE → OFF (scale-down of an empty worker)."""
@@ -194,31 +209,27 @@ class WorkerPool:
         self._active_idx.remove(w.idx)
         heapq.heappush(self._off_heap, w.idx)
         self._n_alive -= 1
+        self.transport.stop_worker(w)
 
     def kill_worker(self, idx: int) -> List[Message]:
-        """Abruptly terminate a worker: cancel its PE tasks, harvest the
-        messages they were processing.
+        """Abruptly terminate a worker and harvest the messages it was
+        processing.
 
-        The task-level mechanics of the sim's ``fail_worker_at`` failure:
-        everything here mutates synchronously on the event-loop thread, so
-        a BUSY PE is either still awaiting its payload (the cancellation
-        lands there; its ``finally`` runs later against an already-emptied
-        worker) or has already run its completion bookkeeping — a
-        harvested message can never also complete.  Harvest order is PE
-        order, matching the sim's one-by-one ``insert(0, m)`` sequence, so
-        the last PE's message ends up globally first once requeued.
+        The transport does the backend-specific demolition — cancelling
+        PE tasks in-process, or SIGKILL + data-channel drain for a worker
+        OS process — and returns exactly the in-flight messages that can
+        provably never complete (a completion that already reached the
+        master wins over harvesting, so a message can never do both).
+        Harvest order is PE order, matching the sim's one-by-one
+        ``insert(0, m)`` sequence, so the last PE's message ends up
+        globally first once requeued.  Everything here runs synchronously
+        on the event-loop thread.
         """
         w = self.workers[idx]
-        harvested: List[Message] = []
-        for pe in list(w.pes):
-            if pe.msg is not None:
-                harvested.append(pe.msg)
-                pe.msg = None
-            pe.state = PEState.STOPPED
-            if pe.task is not None and not pe.task.done():
-                pe.task.cancel()
-        # the cancelled tasks' ``finally`` blocks find an emptied ``pes``
-        # list and skip their own removal, so the count is settled here
+        harvested = self.transport.kill_worker(w)
+        # any PE still listed belongs to the corpse: settle the count here
+        # (an in-process cancelled task's ``finally`` finds the emptied
+        # ``pes`` list and skips its own removal)
         self._pe_total -= len(w.pes)
         w.pes = []
         if w.state is not WorkerState.OFF:
@@ -244,73 +255,16 @@ class WorkerPool:
         pe = LivePE(req.image, req.size_estimate, uid=self._pe_uid)
         w.pes.append(pe)
         self._pe_total += 1
-        pe.task = asyncio.get_running_loop().create_task(
-            self._pe_main(w, pe), name=f"pe-{w.idx}-{pe.uid}-{req.image}"
-        )
-        self._tasks.add(pe.task)
-        pe.task.add_done_callback(self._tasks.discard)
+        self.transport.spawn_pe(w, pe)
         return True
 
-    # ---- the PE loop -------------------------------------------------------
+    # ---- shared gate (both transports' pull paths run through this) --------
     def _gate_ok(self, worker: LiveWorker, msg: Message) -> bool:
         return not self._multi or live_worker_fits_message(
             worker.pes, msg, self._dims
         )
 
-    async def _pe_main(self, worker: LiveWorker, pe: LivePE) -> None:
-        cfg = self.cfg
-        clock = self.clock
-        master = self.master
-        try:
-            await clock.sleep(cfg.pe_start_delay)
-            pe.state = PEState.IDLE
-            pe.idle_since = clock.now()
-            while True:
-                head = master.head(pe.image)
-                if head is not None and self._gate_ok(worker, head):
-                    msg = master.pull(pe.image)
-                    # single-threaded loop: the head cannot change between
-                    # peek and pull without an await in between
-                    assert msg is head
-                    pe.state = PEState.BUSY
-                    pe.msg = msg
-                    msg.start_t = clock.now()
-                    await self.payload(msg, clock)
-                    msg.done_t = clock.now()
-                    pe.msg = None
-                    pe.state = PEState.IDLE
-                    pe.idle_since = clock.now()
-                    master.complete(msg)
-                    continue
-                remaining = cfg.container_idle_timeout - (
-                    clock.now() - pe.idle_since
-                )
-                if remaining <= 0:
-                    break  # graceful self-termination
-                if head is not None:
-                    # vector-gated head: poll (head-blocking FIFO — the
-                    # blocked head is never skipped)
-                    await clock.sleep(min(remaining, self.poll_interval))
-                else:
-                    await master.wait_for_work(
-                        pe.image, clock.to_wall(remaining)
-                    )
-        except asyncio.CancelledError:
-            pass  # driver shutdown: drop the PE silently
-        finally:
-            pe.state = PEState.STOPPED
-            try:
-                worker.pes.remove(pe)
-            except ValueError:
-                pass  # kill_worker already cleared the list (and the count)
-            else:
-                self._pe_total -= 1
-
     # ---- shutdown ----------------------------------------------------------
     async def shutdown(self) -> None:
-        """Cancel and reap every outstanding PE task."""
-        tasks = [t for t in self._tasks if not t.done()]
-        for t in tasks:
-            t.cancel()
-        if tasks:
-            await asyncio.gather(*tasks, return_exceptions=True)
+        """Tear down every PE/worker the transport still hosts."""
+        await self.transport.close()

@@ -7,12 +7,15 @@ across the scenario's runs (the paper's 10-run persistence), and reduces
 the recorded time series to the same summary metrics the paper's figures
 report (utilization, scheduled-vs-measured error, worker targets).
 
-Two interchangeable execution backends share this runner: the
+Three interchangeable execution backends share this runner: the
 discrete-event simulator (``backend="sim"``, the default — deterministic,
-tick-exact) and the live asyncio runtime (``backend="live"`` — real
+tick-exact), the live asyncio runtime (``backend="live"`` — real
 concurrent master/worker execution in scaled wall-clock time,
-``repro.runtime``).  Both return ``SimResult``-shaped records, so the
-summaries, expectation checks, and policy sweeps below are backend-blind.
+``repro.runtime``), and the same runtime over OS-process workers
+(``backend="multiproc"`` — each worker is an ``mp.Process`` behind the
+pickled command/data queues of ``runtime.transport.MultiprocTransport``).
+All return ``SimResult``-shaped records, so the summaries, expectation
+checks, and policy sweeps below are backend-blind.
 """
 
 from __future__ import annotations
@@ -154,19 +157,29 @@ def run_scenario(
     both the sim and live backends honor identically.
 
     ``backend`` selects the execution engine: ``"sim"`` (discrete-event,
-    deterministic) or ``"live"`` (the asyncio master/worker runtime; pass a
+    deterministic), ``"live"`` (the asyncio master/worker runtime; pass a
     ``repro.runtime.RuntimeConfig`` as ``runtime`` to control time scale
-    and payload).  The same IRM code schedules both.
+    and payload), or ``"multiproc"`` (the live runtime with each worker
+    promoted to an OS process — ``runtime.transport`` is forced to
+    ``"multiproc"`` on the runtime config).  The same IRM code schedules
+    all three.
     """
-    if backend not in ("sim", "live"):
+    if backend not in ("sim", "live", "multiproc"):
         raise ValueError(
-            f"unknown backend {backend!r}; expected 'sim' or 'live' "
-            "(the serving backend has its own adapter: "
+            f"unknown backend {backend!r}; expected 'sim', 'live' or "
+            "'multiproc' (the serving backend has its own adapter: "
             "repro.scenarios.serving.run_serving_scenario)"
         )
-    if runtime is not None and backend != "live":
-        raise ValueError("runtime config only applies to backend='live'")
+    if runtime is not None and backend == "sim":
+        raise ValueError(
+            "runtime config only applies to backend='live'/'multiproc'"
+        )
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if backend not in scn.backends:
+        raise ValueError(
+            f"scenario {scn.name!r} does not support backend {backend!r}; "
+            f"supported: {scn.backends}"
+        )
     irm_cfg = scn.irm_config()
     if policy is not None:
         if irm is not None:
@@ -199,16 +212,20 @@ def run_scenario(
     if sim_overrides:
         sim_cfg = dataclasses.replace(sim_cfg, **sim_overrides)
 
-    if backend == "live":
-        from ..runtime.live import run_live
+    if backend in ("live", "multiproc"):
+        from ..runtime.live import RuntimeConfig, run_live
+
+        rt = runtime if runtime is not None else RuntimeConfig()
+        if backend == "multiproc" and rt.transport != "multiproc":
+            rt = dataclasses.replace(rt, transport="multiproc")
     runs: List[SimResult] = []
     makespans: List[float] = []
     n = n_runs if n_runs is not None else scn.n_runs
     overrides = stream_overrides or {}
     for i in range(n):
         stream = scn.make_stream(base_seed + i, **overrides)
-        if backend == "live":
-            res = run_live(stream, sim_cfg, irm=irm, runtime=runtime)
+        if backend in ("live", "multiproc"):
+            res = run_live(stream, sim_cfg, irm=irm, runtime=rt)
         else:
             res = simulate(stream, sim_cfg, irm=irm)
         runs.append(res)

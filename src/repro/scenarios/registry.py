@@ -71,6 +71,11 @@ class Scenario:
     smoke_overrides: Optional[Dict[str, object]] = None
     # sim-time cap to pair with smoke_overrides
     smoke_t_max: Optional[float] = None
+    # execution backends this scenario supports (``run_scenario`` rejects
+    # others; ``--list`` prints the set).  Default: every backend — a
+    # scenario narrows this only when its semantics genuinely require one
+    # engine (e.g. a wall-clock-calibration scenario that is sim-only).
+    backends: Tuple[str, ...] = ("sim", "live", "multiproc", "serving")
 
     def stream(self, seed: int = 0, **overrides: object) -> Stream:
         return self.make_stream(seed, **overrides)
@@ -90,6 +95,7 @@ def register_scenario(
     expectations: Tuple[Expectation, ...] = (),
     smoke_overrides: Optional[Dict[str, object]] = None,
     smoke_t_max: Optional[float] = None,
+    backends: Tuple[str, ...] = ("sim", "live", "multiproc", "serving"),
 ) -> Callable[[Callable[..., Stream]], Callable[..., Stream]]:
     """Decorator: register a stream factory as a named scenario.
 
@@ -111,6 +117,7 @@ def register_scenario(
             expectations=tuple(expectations),
             smoke_overrides=dict(smoke_overrides) if smoke_overrides else None,
             smoke_t_max=smoke_t_max,
+            backends=tuple(backends),
         )
         return fn
 

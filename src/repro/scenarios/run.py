@@ -18,6 +18,9 @@ One entry point for every registered workload:
   # the same scenario on the live asyncio master/worker runtime
   python -m repro.scenarios.run microscopy --smoke --backend live --time-scale 0.01
 
+  # workers as OS processes behind pickled command/data queues
+  python -m repro.scenarios.run microscopy --smoke --backend multiproc
+
   # the same stream through the continuous-batching serving backend
   python -m repro.scenarios.run bursty --backend serving --smoke
 
@@ -103,16 +106,17 @@ def _smoke_note(scn) -> None:
 def _list(args: argparse.Namespace) -> int:
     print(
         f"{'name':<14} {'runs':>4}  {'dims':<10} {'policies':<8} "
-        f"{'tags':<24} description"
+        f"{'backends':<27} {'tags':<24} description"
     )
-    print("-" * 96)
+    print("-" * 120)
     for scn in list_scenarios():
         tags = ",".join(scn.tags)
         dims = getattr(scn.sim_config(), "resource_dims", ("cpu",))
         family = "vector" if len(dims) > 1 else "any-fit"
+        backends = ",".join(scn.backends)
         print(
             f"{scn.name:<14} {scn.n_runs:>4}  {'+'.join(dims):<10} "
-            f"{family:<8} {tags:<24} {scn.description}"
+            f"{family:<8} {backends:<27} {tags:<24} {scn.description}"
         )
         if args.verbose:
             for e in scn.expectations:
@@ -136,16 +140,24 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"multi-resource scenarios, vector ({', '.join(VECTOR_POLICIES)}); "
         "default: the scenario's configured policy",
     )
-    ap.add_argument("--backend", choices=("sim", "live", "serving"),
+    ap.add_argument("--backend",
+                    choices=("sim", "live", "multiproc", "serving"),
                     default="sim",
                     help="cluster sim (paper testbed), live asyncio "
-                    "master/worker runtime, or serving engine")
+                    "master/worker runtime, the same runtime with workers "
+                    "as OS processes (multiproc), or serving engine")
     ap.add_argument("--time-scale", type=float, default=0.02,
-                    help="live backend: wall seconds per scenario second "
+                    help="live backends: wall seconds per scenario second "
                     "(smaller = faster run, more concurrency jitter)")
     ap.add_argument("--payload", default="sleep",
                     choices=tuple(sorted(PAYLOADS)),
-                    help="live backend: per-message PE payload")
+                    help="live backends: per-message PE payload")
+    ap.add_argument("--measurement", choices=("emulated", "os"),
+                    default="emulated",
+                    help="multiproc backend: feed the profiler the sim's "
+                    "emulated CPU draws (parity with the other backends) or "
+                    "real per-message OS measurements from the worker "
+                    "processes")
     ap.add_argument("--fail-worker", default=None, metavar="IDX:T",
                     help="inject a worker failure: kill worker IDX at "
                     "scenario time T seconds (sim and live backends; "
@@ -256,12 +268,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                       stream_overrides=stream_overrides, t_max=t_max,
                       backend=args.backend, sim_overrides=sim_overrides,
                       engine=args.engine)
-    if args.backend == "live":
+    if args.backend in ("live", "multiproc"):
         from ..runtime.live import RuntimeConfig
 
         run_kwargs["runtime"] = RuntimeConfig(
-            time_scale=args.time_scale, payload=args.payload
+            time_scale=args.time_scale,
+            payload=args.payload,
+            transport="multiproc" if args.backend == "multiproc" else "inproc",
+            measurement=args.measurement,
         )
+    elif args.measurement != "emulated":
+        print("note: --measurement applies to the multiproc backend only",
+              file=sys.stderr)
     try:
         if len(policies) > 1 and None not in policies:
             # policy sweep: one process per policy (IRM state is per-policy)

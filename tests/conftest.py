@@ -59,6 +59,59 @@ def pytest_runtest_call(item):
         signal.signal(signal.SIGALRM, old_handler)
 
 
+# ---------------------------------------------------------------------------
+# Child-process reaping: the multiproc transport runs workers as OS
+# processes.  A test that fails (or trips the SIGALRM watchdog above)
+# mid-run can leave daemonized worker children behind; a later test —
+# or the pytest process itself at exit — would then hang on queue feeder
+# threads or inherit stale children.  Reap after every test, and once
+# more at session teardown, so one broken run can never poison the rest
+# of the suite.
+# ---------------------------------------------------------------------------
+
+
+def _reap_children(grace_s: float = 2.0) -> int:
+    """SIGKILL + join any live multiprocessing children; returns count."""
+    import multiprocessing as mp
+
+    children = mp.active_children()
+    for proc in children:
+        try:
+            proc.kill()
+        except (OSError, ValueError, AttributeError):
+            pass
+    for proc in children:
+        try:
+            proc.join(grace_s)
+        except (OSError, ValueError, AssertionError):
+            pass
+    return len(children)
+
+
+@pytest.fixture(autouse=True)
+def _reap_stray_worker_processes():
+    """Per-test guard: no test may leak worker processes to the next one.
+
+    Runs the reap in teardown regardless of pass/fail, so a test that
+    raised (including via the timeout watchdog) while a multiproc
+    transport was live still gets its children collected.
+    """
+    yield
+    _reap_children()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _reap_worker_processes_at_exit():
+    """Session backstop: whatever survived per-test reaping dies here."""
+    yield
+    reaped = _reap_children()
+    if reaped:
+        import sys
+
+        print(f"\n[conftest] reaped {reaped} stray worker process(es) "
+              "at session teardown", file=sys.stderr)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

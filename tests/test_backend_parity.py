@@ -13,6 +13,13 @@ the fault model: a worker killed mid-run must requeue its in-flight
 messages and still complete the stream on both backends, with identical
 requeue accounting.
 
+The same bands pin ``backend="multiproc"`` — the live runtime with every
+worker promoted to an OS process behind pickled queues
+(``runtime.transport.MultiprocTransport``).  That backend adds real IPC
+latency and process scheduling on top of event-loop jitter, yet must
+exhibit the *same* packing behavior, because the master, IRM, and
+lifecycle code are byte-for-byte shared and only the transport differs.
+
 Tolerances are deliberately wide bands, not equalities: they catch the
 failure modes we actually saw while building the backend (phantom-bin
 livelock → utilization collapses to ~half; arrival race → worker target
@@ -28,9 +35,14 @@ from repro.scenarios.registry import get_scenario
 # 1 scenario second = 10 ms wall: fast enough for CI, coarse enough that
 # event-loop jitter on a loaded runner stays small relative to the delays
 FAST = RuntimeConfig(time_scale=0.01)
+# the process backend adds queue hops and OS scheduling; give it 2x the
+# wall budget per scenario second so IPC latency stays small relative to
+# the boot/start delays the bands are calibrated against
+FAST_MP = RuntimeConfig(time_scale=0.02)
 
 
-def _pair(name: str, policy: str, seed: int = 0, sim_overrides=None):
+def _pair(name: str, policy: str, seed: int = 0, sim_overrides=None,
+          live_backend: str = "live"):
     scn = get_scenario(name)
     kwargs = dict(
         policy=policy,
@@ -41,7 +53,9 @@ def _pair(name: str, policy: str, seed: int = 0, sim_overrides=None):
         sim_overrides=sim_overrides,
     )
     sim = run_scenario(name, backend="sim", **kwargs)
-    live = run_scenario(name, backend="live", runtime=FAST, **kwargs)
+    runtime = FAST if live_backend == "live" else FAST_MP
+    live = run_scenario(name, backend=live_backend, runtime=runtime,
+                        **kwargs)
     return sim, live
 
 
@@ -153,5 +167,65 @@ def test_fault_parity_worker_kill_mid_run():
     assert sim.final.requeued > 0
     assert live.final.requeued == sim.final.requeued
     # scheduling behavior stays inside the standard parity bands
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)
+
+
+# ---------------------------------------------------------------------------
+# The same contracts over OS-process workers (backend="multiproc")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(240)
+def test_multiproc_matches_sim_microscopy_first_fit():
+    """Scalar policy over real process workers: the paper's use case must
+    land in the exact bands the in-process asyncio backend is held to —
+    the transport swap may not change packing behavior."""
+    sim, live = _pair("microscopy", "first-fit", live_backend="multiproc")
+    _assert_parity(sim, live, util_tol=0.15, target_tol=2,
+                   makespan_ratio=1.6)
+    assert live.summary["low_index_load_fraction"] > 0.6
+
+
+@pytest.mark.timeout(240)
+def test_multiproc_matches_sim_mixed_accel_vector():
+    """The rigid accelerator gate with pulls arriving as IPC events: the
+    gate check runs master-side on the event loop (head + gate + pull is
+    atomic there), so capacity guarantees must hold exactly even though
+    the requesting PEs live in other processes."""
+    sim, live = _pair("mixed-accel", "vector-first-fit",
+                      live_backend="multiproc")
+    _assert_parity(sim, live, util_tol=0.2, target_tol=3,
+                   makespan_ratio=1.8)
+    assert live.summary["bottleneck_dim"] == sim.summary["bottleneck_dim"]
+    for res in (live.final, sim.final):
+        assert (res.scheduled_res <= 1.0 + 1e-9).all()
+
+
+@pytest.mark.timeout(240)
+def test_multiproc_fault_parity_worker_kill_mid_run():
+    """The fault contract over a *real* SIGKILL: killing the worker's OS
+    process mid-run must harvest its in-flight messages back to the
+    master's head and still complete the whole stream.  The requeue count
+    can differ from the sim's by the messages the process had already
+    flushed into the data queue at the kill instant (the drain applies
+    those as completions — work that genuinely finished is not redone),
+    so this asserts a band rather than the in-process backend's exact
+    equality: at least one requeue, within ±2 of the sim's count."""
+    scn = get_scenario("microscopy")
+    kwargs = dict(
+        policy="first-fit", base_seed=0, n_runs=1,
+        stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
+        sim_overrides={"fail_worker_at": (0, 20.5)},
+    )
+    sim = run_scenario("microscopy", backend="sim", **kwargs)
+    live = run_scenario("microscopy", backend="multiproc",
+                        runtime=RuntimeConfig(time_scale=0.05), **kwargs)
+    # at-least-once: every message completes despite the SIGKILL
+    assert sim.summary["completed"] == sim.summary["total"]
+    assert live.summary["completed"] == live.summary["total"]
+    assert sim.final.requeued > 0
+    assert live.final.requeued > 0
+    assert abs(live.final.requeued - sim.final.requeued) <= 2
     _assert_parity(sim, live, util_tol=0.15, target_tol=2,
                    makespan_ratio=1.6)

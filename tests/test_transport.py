@@ -1,0 +1,190 @@
+"""Transport layer: OS-process workers behind the same master.
+
+``backend="multiproc"`` promotes every worker to a real
+``multiprocessing.Process`` speaking pickled command/data queues
+(``runtime.transport.MultiprocTransport``), while ``backend="live"``
+keeps the zero-copy in-process handoff (``InProcTransport``).  These
+tests pin the transport contract itself: streams complete over the
+process boundary, the serialization counters and profiler-drift ledger
+are populated, a SIGKILLed worker's in-flight messages are harvested
+back into the master with at-least-once accounting, no child processes
+outlive a run, and the scenario engine routes/validates the new backend.
+Cross-backend *scheduling* parity lives in test_backend_parity.py.
+"""
+
+import multiprocessing as mp
+
+import pytest
+
+from repro.core.sim import SimConfig
+from repro.core.workloads import usecase_workload
+from repro.runtime import (
+    InProcTransport,
+    MultiprocTransport,
+    RuntimeConfig,
+    make_transport,
+    run_live,
+)
+from repro.scenarios.engine import run_scenario
+from repro.scenarios.registry import get_scenario
+
+FAST = RuntimeConfig(time_scale=0.01, transport="multiproc")
+
+
+def _small_stream(seed=0, n=24):
+    return usecase_workload(seed=seed, n_images=n, duration_range=(4.0, 8.0))
+
+
+# ---------------------------------------------------------------------------
+# Transport registry / construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_make_transport_resolves_names():
+    assert isinstance(make_transport("inproc"), InProcTransport)
+    assert isinstance(make_transport("multiproc"), MultiprocTransport)
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_transport("carrier-pigeon")
+
+
+@pytest.mark.timeout(30)
+def test_transports_share_the_stats_interface():
+    for tr in (InProcTransport(), MultiprocTransport()):
+        s = tr.stats()
+        assert s["transport"] in ("inproc", "multiproc")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end over the process boundary
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+def test_multiproc_stream_completes_and_counts_bytes():
+    stats = {}
+    res = run_live(_small_stream(), SimConfig(), runtime=FAST, stats=stats)
+    assert res.completed == res.total == 24
+    assert res.requeued == 0
+    t = stats["transport"]
+    assert t["transport"] == "multiproc"
+    assert t["workers_spawned"] >= 1
+    # every message crossed the wire twice (out as work, in as completion)
+    assert t["data_msgs_out"] == 24
+    assert t["data_msgs_in"] == 24
+    assert t["data_bytes_out"] > 0 and t["data_bytes_in"] > 0
+    assert t["ser_bytes_per_msg"] > 0
+    assert t["ser_ms_per_msg"] >= 0.0
+
+
+@pytest.mark.timeout(180)
+def test_multiproc_reports_real_cpu_and_drift():
+    """The drift ledger is the point of having real processes: emulated
+    model CPU vs. measured thread CPU, per message, surfaced as a stat.
+    Sleep payloads burn ~no CPU, so real << emulated and the drift is
+    large and positive — exactly what the ledger should expose."""
+    stats = {}
+    res = run_live(_small_stream(), SimConfig(), runtime=FAST, stats=stats)
+    assert res.completed == res.total
+    t = stats["transport"]
+    assert t["measurement"] == "emulated"
+    assert t["emulated_cpu_core_s"] > 0.0
+    assert 0.0 <= t["real_cpu_core_s"] < t["emulated_cpu_core_s"]
+    assert t["profiler_drift_pp"] > 0.0
+    # whole-process CPU (os.times deltas) was actually sampled
+    assert t["proc_cpu_s"] >= 0.0
+
+
+@pytest.mark.timeout(180)
+def test_multiproc_os_measurement_mode_completes():
+    """measurement="os" feeds the real per-message CPU samples to the
+    (unmodified) profiler instead of the emulated draws.  With sleep
+    payloads the learned sizes collapse toward zero — packing gets
+    denser, but the stream must still fully complete (the FIFO handoff
+    does not depend on the profiler being right)."""
+    rt = RuntimeConfig(time_scale=0.01, transport="multiproc",
+                       measurement="os")
+    stats = {}
+    res = run_live(_small_stream(), SimConfig(), runtime=rt, stats=stats)
+    assert res.completed == res.total
+    assert stats["transport"]["measurement"] == "os"
+
+
+@pytest.mark.timeout(60)
+def test_os_measurement_requires_multiproc():
+    rt = RuntimeConfig(time_scale=0.01, transport="inproc", measurement="os")
+    with pytest.raises(ValueError, match="measurement"):
+        run_live(_small_stream(n=4), SimConfig(), runtime=rt)
+
+
+# ---------------------------------------------------------------------------
+# Fault path: SIGKILL + harvest keeps at-least-once accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(240)
+def test_multiproc_kill_harvests_and_requeues():
+    """Kill worker 0 mid-run: the parent SIGKILLs the OS process, drains
+    whatever completions were already flushed into the data queue, and
+    requeues the still-in-flight originals at the master's head.  The
+    stream must still complete in full, with the requeue count recorded
+    in the SimResult (the fault-parity suite compares it across
+    backends; here we pin that the multiproc path produces it at all)."""
+    cfg = SimConfig(fail_worker_at=(0, 20.5))
+    rt = RuntimeConfig(time_scale=0.05, transport="multiproc")
+    stream = usecase_workload(seed=0, n_images=40,
+                              duration_range=(4.0, 8.0))
+    res = run_live(stream, cfg, runtime=rt)
+    assert res.completed == res.total == 40
+    assert res.requeued > 0
+
+
+@pytest.mark.timeout(240)
+def test_multiproc_no_orphan_processes_after_runs():
+    """Neither a clean drain nor a mid-run SIGKILL may leak children."""
+    run_live(_small_stream(), SimConfig(), runtime=FAST)
+    assert mp.active_children() == []
+    cfg = SimConfig(fail_worker_at=(0, 20.5))
+    rt = RuntimeConfig(time_scale=0.05, transport="multiproc")
+    run_live(usecase_workload(seed=0, n_images=40,
+                              duration_range=(4.0, 8.0)), cfg, runtime=rt)
+    assert mp.active_children() == []
+
+
+# ---------------------------------------------------------------------------
+# Scenario-engine routing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(180)
+def test_engine_routes_multiproc_backend():
+    scn = get_scenario("microscopy")
+    result = run_scenario(
+        "microscopy", policy="first-fit", n_runs=1,
+        stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
+        backend="multiproc", runtime=RuntimeConfig(time_scale=0.01),
+    )
+    assert result.backend == "multiproc"
+    assert result.summary["completed"] == result.summary["total"]
+
+
+@pytest.mark.timeout(60)
+def test_engine_rejects_unsupported_backend_combinations():
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_scenario("microscopy", backend="teleport")
+    with pytest.raises(ValueError, match="runtime config"):
+        run_scenario("microscopy", backend="sim",
+                     runtime=RuntimeConfig(time_scale=0.01))
+
+
+@pytest.mark.timeout(60)
+def test_engine_honors_scenario_backend_allowlist():
+    import dataclasses
+
+    scn = get_scenario("microscopy")
+    sim_only = dataclasses.replace(scn, name="sim-only-probe",
+                                   backends=("sim",))
+    with pytest.raises(ValueError, match="does not support backend"):
+        run_scenario(sim_only, backend="multiproc", n_runs=1,
+                     stream_overrides=scn.smoke_overrides,
+                     t_max=scn.smoke_t_max)
