@@ -28,7 +28,7 @@ def run(out_dir: str) -> Dict:
     rows = [
         (float(t), *map(float, sched), *map(float, meas))
         for t, sched, meas in zip(res.times, res.scheduled_cpu,
-                                  res.measured_cpu)
+                                  res.measured_cpu, strict=True)
     ]
     W = SIM.max_workers
     dump_csv(

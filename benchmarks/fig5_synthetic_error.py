@@ -27,7 +27,7 @@ def run(out_dir: str) -> Dict:
     dump_csv(
         out_dir, "fig5_error.csv",
         ["t"] + [f"err_w{i}" for i in range(W)],
-        [(float(t), *map(float, e)) for t, e in zip(res.times, err)],
+        [(float(t), *map(float, e)) for t, e in zip(res.times, err, strict=True)],
     )
 
     active = res.scheduled_cpu > 0.05

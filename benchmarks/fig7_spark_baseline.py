@@ -35,7 +35,7 @@ def run(out_dir: str) -> Dict:
         [
             (float(t), float(c), float(u), int(p))
             for t, c, u, p in zip(spark.times, spark.executor_cores,
-                                  spark.used_cores, spark.pending_tasks)
+                                  spark.used_cores, spark.pending_tasks, strict=True)
         ],
     )
 

@@ -40,12 +40,12 @@ def run(out_dir: str) -> Dict:
         out_dir, "fig8_scheduled_cpu.csv",
         ["t"] + [f"sched_w{i}" for i in range(W)],
         [(float(t), *map(float, s)) for t, s in zip(res.times,
-                                                    res.scheduled_cpu)],
+                                                    res.scheduled_cpu, strict=True)],
     )
     dump_csv(
         out_dir, "fig9_error.csv",
         ["t"] + [f"err_w{i}" for i in range(W)],
-        [(float(t), *map(float, e)) for t, e in zip(res.times, res.error)],
+        [(float(t), *map(float, e)) for t, e in zip(res.times, res.error, strict=True)],
     )
     dump_csv(
         out_dir, "fig10_workers.csv",
@@ -53,7 +53,7 @@ def run(out_dir: str) -> Dict:
         [
             (float(t), int(a), int(g), int(i))
             for t, a, g, i in zip(res.times, res.active_workers,
-                                  res.target_workers, res.ideal_bins)
+                                  res.target_workers, res.ideal_bins, strict=True)
         ],
     )
 

@@ -84,7 +84,7 @@ def main() -> None:
             cand.setdefault(key(r), []).append(r)
 
     opt = []
-    for k, rows in cand.items():
+    for rows in cand.values():
         best = min(rows, key=lambda r: r["roofline_step_s"])
         opt.append(best)
     opt = sort_rows(opt)

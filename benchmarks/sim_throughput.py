@@ -43,7 +43,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import simulate, simulate_reference
+from repro.core import simulate
+from repro.core.sim_reference import simulate_reference
 from repro.scenarios import get_scenario
 
 DEFAULT_SCENARIOS = ("synthetic", "microscopy")

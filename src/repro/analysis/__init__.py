@@ -1,0 +1,102 @@
+"""``repro.analysis`` — AST-based invariant checker for the runtime's
+concurrency, determinism, and wire contracts.
+
+PR 7 split the runtime across real OS processes and threads; the
+correctness of that split rests on invariants that used to live only as
+prose in docs/ARCHITECTURE.md.  This package machine-checks them on
+every commit (CI job ``analysis``; also wrapped into tier-1 by
+``tests/test_analysis.py``):
+
+=====  ====================================================================
+Rule   Guarantee protected
+=====  ====================================================================
+R1     blocking-in-async: nothing reachable from the runtime's ``async
+       def`` bodies may block the event loop (``@worker_side`` code and
+       annotated ``@loop_only(blocking=…)`` sections excepted)
+R2     affinity: the multiproc data channel is single-consumer
+       (``@loop_only`` readers only) and master-side mirrors /
+       ``Master`` queues mutate only on the loop thread, never
+       worker-side
+R3     frozen reference: ``core/sim_reference.py`` is pinned by content
+       hash and importable only from the equivalence/parity allowlist
+R4     wire contract: every class pickled across the transport has its
+       field set registered in ``wire_manifest.json`` and round-tripped
+       by ``tests/test_wire_contract.py``
+R5     determinism: no wall-clock reads, ambient RNG, or set-order
+       iteration in ``core/`` sim paths
+=====  ====================================================================
+
+Run it with ``python -m repro.analysis`` (see ``__main__.py``).  The
+checker is stdlib-only — it parses the tree, it never imports it.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional
+
+from .baseline import DEFAULT_BASELINE_NAME, apply_baseline, load_baseline
+from .model import ANALYZED_TREES, Finding, RepoIndex
+from .rules_concurrency import check_affinity, check_blocking_in_async
+from .rules_contracts import check_frozen_reference, check_wire_contract
+from .rules_determinism import check_determinism
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "RepoIndex",
+    "run_analysis",
+    "apply_baseline",
+    "load_baseline",
+    "DEFAULT_BASELINE_NAME",
+    "ANALYZED_TREES",
+]
+
+#: rule id -> (checker, one-line description); order is report order.
+RULES: Dict[str, tuple] = {
+    "R1": (
+        check_blocking_in_async,
+        "no blocking calls reachable from runtime async code",
+    ),
+    "R2": (
+        check_affinity,
+        "single-consumer data channel + loop-thread-only mirror/queue mutation",
+    ),
+    "R3": (
+        check_frozen_reference,
+        "core/sim_reference.py content-hash pin + import allowlist",
+    ),
+    "R4": (
+        check_wire_contract,
+        "transport-pickled field sets registered and contract-tested",
+    ),
+    "R5": (
+        check_determinism,
+        "no wall-clock, ambient RNG, or set-order iteration in core/",
+    ),
+}
+
+
+def run_analysis(
+    root: Path,
+    rules: Optional[Iterable[str]] = None,
+    index: Optional[RepoIndex] = None,
+) -> List[Finding]:
+    """Run the selected rules (default: all) over the tree at ``root``.
+
+    Returns findings sorted by (rule, path, line).  Parse failures in any
+    analyzed file are reported under the pseudo-rule ``parse`` regardless
+    of the selection — an unparseable file is never a clean file.
+    """
+    root = Path(root)
+    if index is None:
+        index = RepoIndex(root)
+    selected = list(rules) if rules is not None else list(RULES)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rules {unknown}; available: {list(RULES)}")
+    findings: List[Finding] = list(index.parse_findings)
+    for rule_id in selected:
+        checker: Callable = RULES[rule_id][0]
+        findings.extend(checker(index, root))
+    return sorted(findings, key=lambda f: (f.rule, f.path, f.line, f.message))

@@ -1,0 +1,151 @@
+"""CLI for the invariant checker: ``python -m repro.analysis``.
+
+Exit codes: 0 = clean (no unsuppressed findings, no stale suppressions),
+1 = findings (or stale baseline entries), 2 = usage/config error.
+
+Typical invocations::
+
+    PYTHONPATH=src python -m repro.analysis                  # text report
+    PYTHONPATH=src python -m repro.analysis --format json --out report.json
+    PYTHONPATH=src python -m repro.analysis --rules R1,R2    # subset
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import (
+    DEFAULT_BASELINE_NAME,
+    RULES,
+    apply_baseline,
+    load_baseline,
+    run_analysis,
+)
+
+
+def _find_root(start: Path) -> Path:
+    """The repo root: the nearest ancestor holding ``src/repro``."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    raise SystemExit(
+        f"error: no src/repro tree found at or above {start} "
+        f"(pass --root explicitly)"
+    )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "AST-based invariant checker: concurrency (R1, R2), frozen "
+            "reference (R3), wire contract (R4), determinism (R5)."
+        ),
+    )
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=None,
+        help="repo root (default: nearest ancestor of CWD with src/repro)",
+    )
+    parser.add_argument(
+        "--rules",
+        default=None,
+        help=f"comma-separated subset of {','.join(RULES)} (default: all)",
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="report format (default: text)",
+    )
+    parser.add_argument(
+        "--out",
+        type=Path,
+        default=None,
+        help="also write the report to this file (same format)",
+    )
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help=f"suppression file (default: <root>/{DEFAULT_BASELINE_NAME})",
+    )
+    parser.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalogue and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, (_, desc) in RULES.items():
+            print(f"{rule_id}  {desc}")
+        return 0
+
+    root = args.root.resolve() if args.root else _find_root(Path.cwd())
+    if not (root / "src" / "repro").is_dir():
+        print(f"error: {root} has no src/repro tree", file=sys.stderr)
+        return 2
+    rules = args.rules.split(",") if args.rules else None
+    try:
+        findings = run_analysis(root, rules=rules)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    baseline_path = args.baseline or (root / DEFAULT_BASELINE_NAME)
+    suppressions = load_baseline(baseline_path)
+    active, suppressed, stale = apply_baseline(findings, suppressions)
+
+    counts: dict = {}
+    for f in active:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    report = {
+        "version": 1,
+        "root": str(root),
+        "rules": {rule_id: desc for rule_id, (_, desc) in RULES.items()},
+        "findings": [f.to_json() for f in active],
+        "suppressed": len(suppressed),
+        "stale_suppressions": stale,
+        "counts": counts,
+        "ok": not active and not stale,
+    }
+
+    if args.format == "json":
+        text = json.dumps(report, indent=2)
+    else:
+        lines = []
+        for f in active:
+            lines.append(f"{f.path}:{f.line}: [{f.rule}] "
+                         f"{f.symbol + ': ' if f.symbol else ''}{f.message}")
+        for entry in stale:
+            lines.append(
+                f"{baseline_path.name}: stale suppression {entry} — the "
+                f"finding no longer exists; delete the entry"
+            )
+        if not lines:
+            lines.append(
+                f"analysis clean: {len(findings)} finding(s) total, "
+                f"{len(suppressed)} suppressed, rules {','.join(RULES)}"
+            )
+        else:
+            lines.append(
+                f"{len(active)} finding(s) ({len(suppressed)} suppressed, "
+                f"{len(stale)} stale suppression(s))"
+            )
+        text = "\n".join(lines)
+
+    print(text)
+    if args.out is not None:
+        args.out.write_text(
+            text + ("\n" if not text.endswith("\n") else ""), encoding="utf-8"
+        )
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

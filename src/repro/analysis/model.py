@@ -1,0 +1,266 @@
+"""Shared model for the invariant checker: findings + an AST index.
+
+The checker is deliberately dependency-free (stdlib ``ast`` only) so the
+CI gate needs nothing but a Python interpreter: it never imports the code
+under analysis, it *parses* it.  ``RepoIndex`` walks the three analyzed
+trees (``src/``, ``tests/``, ``benchmarks/``), parses every ``.py`` file
+once, and records each function with:
+
+- its dotted qualname (``module:Class.method`` / nested chains),
+- whether it is an ``async def``,
+- its affinity annotations (``@loop_only`` / ``@worker_side`` from
+  ``repro.runtime.annotations``), with nested functions inheriting the
+  enclosing function's annotations (a thread target defined inside a
+  ``@worker_side`` entry point is worker-side too),
+- the raw AST node, for the rules to scan.
+
+Files that fail to parse become findings themselves (rule ``parse``)
+rather than silent gaps in coverage.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "Finding",
+    "FunctionInfo",
+    "ModuleIndex",
+    "RepoIndex",
+    "ANALYZED_TREES",
+    "decorator_name",
+    "load_packaged_json",
+]
+
+#: Trees the checker walks, relative to the repo root.
+ANALYZED_TREES = ("src", "tests", "benchmarks")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation, stable enough to key a suppression on."""
+
+    rule: str          # "R1".."R5" or "parse"
+    path: str          # repo-root-relative, forward slashes
+    line: int
+    symbol: str        # qualname of the enclosing function/class, or ""
+    message: str
+
+    def key(self) -> str:
+        """Baseline key: everything except the line number, so a pure
+        line-shift (edits above the finding) cannot invalidate a
+        suppression while an actual content change does."""
+        return f"{self.rule}:{self.path}:{self.symbol}:{self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def decorator_name(node: ast.expr) -> Optional[str]:
+    """The bare name of a decorator expression (``@x``, ``@m.x``, ``@x(...)``)."""
+    if isinstance(node, ast.Call):
+        node = node.func
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _blocking_reason(node: ast.expr) -> Tuple[bool, Optional[str]]:
+    """(has_blocking_kwarg, reason) for a ``@loop_only(blocking=...)`` call."""
+    if not isinstance(node, ast.Call):
+        return False, None
+    for kw in node.keywords:
+        if kw.arg == "blocking":
+            if isinstance(kw.value, ast.Constant) and isinstance(kw.value.value, str):
+                return True, kw.value.value
+            return True, None
+    return False, None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One ``def``/``async def`` with its affinity annotations resolved."""
+
+    qualname: str                  # e.g. "MultiprocTransport._on_pull"
+    name: str
+    node: ast.AST                  # FunctionDef | AsyncFunctionDef
+    path: str                      # repo-relative file path
+    is_async: bool
+    loop_only: bool = False
+    worker_side: bool = False
+    blocking_reason: Optional[str] = None   # set iff @loop_only(blocking=...)
+    has_blocking_kwarg: bool = False
+    parent: Optional["FunctionInfo"] = None  # enclosing function, if nested
+    owner_class: Optional[str] = None        # immediately enclosing class
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+    def allows_blocking(self) -> bool:
+        return self.worker_side or (
+            self.loop_only and bool(self.blocking_reason)
+        )
+
+
+class ModuleIndex:
+    """Parsed view of one file: its tree plus every function in it."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.functions: List[FunctionInfo] = []
+        self._collect(tree.body, qual_prefix="", parent=None, owner_class=None)
+
+    def _collect(
+        self,
+        body: Iterable[ast.stmt],
+        qual_prefix: str,
+        parent: Optional[FunctionInfo],
+        owner_class: Optional[str],
+    ) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = FunctionInfo(
+                    qualname=qual_prefix + node.name,
+                    name=node.name,
+                    node=node,
+                    path=self.path,
+                    is_async=isinstance(node, ast.AsyncFunctionDef),
+                    parent=parent,
+                    owner_class=owner_class,
+                )
+                for dec in node.decorator_list:
+                    dname = decorator_name(dec)
+                    if dname == "loop_only":
+                        info.loop_only = True
+                        has_kw, reason = _blocking_reason(dec)
+                        info.has_blocking_kwarg = has_kw
+                        info.blocking_reason = reason
+                    elif dname == "worker_side":
+                        info.worker_side = True
+                # nested defs inherit the enclosing affinity (a thread
+                # target inside a @worker_side entry point is worker-side)
+                if parent is not None:
+                    info.loop_only = info.loop_only or parent.loop_only
+                    info.worker_side = info.worker_side or parent.worker_side
+                    if info.blocking_reason is None:
+                        info.blocking_reason = parent.blocking_reason
+                self.functions.append(info)
+                self._collect(
+                    node.body,
+                    qual_prefix=info.qualname + ".",
+                    parent=info,
+                    owner_class=owner_class,
+                )
+            elif isinstance(node, ast.ClassDef):
+                self._collect(
+                    node.body,
+                    qual_prefix=qual_prefix + node.name + ".",
+                    parent=parent,
+                    owner_class=node.name,
+                )
+            elif isinstance(node, (ast.If, ast.Try, ast.With)):
+                # functions defined under guards (TYPE_CHECKING, try/except
+                # import fallbacks) still count
+                for child_body in _stmt_bodies(node):
+                    self._collect(child_body, qual_prefix, parent, owner_class)
+
+    def classes(self) -> Dict[str, ast.ClassDef]:
+        return {
+            n.name: n
+            for n in ast.walk(self.tree)
+            if isinstance(n, ast.ClassDef)
+        }
+
+
+def _stmt_bodies(node: ast.stmt) -> List[List[ast.stmt]]:
+    out: List[List[ast.stmt]] = []
+    for field in ("body", "orelse", "finalbody"):
+        got = getattr(node, field, None)
+        if got:
+            out.append(got)
+    for handler in getattr(node, "handlers", []) or []:
+        out.append(handler.body)
+    return out
+
+
+class RepoIndex:
+    """All parsed modules of the analyzed trees, plus name-based lookup."""
+
+    def __init__(self, root: Path, trees: Iterable[str] = ANALYZED_TREES):
+        self.root = Path(root)
+        self.modules: Dict[str, ModuleIndex] = {}
+        self.parse_findings: List[Finding] = []
+        for tree_name in trees:
+            base = self.root / tree_name
+            if not base.is_dir():
+                continue
+            for py in sorted(base.rglob("*.py")):
+                if _SKIP_DIRS.intersection(py.relative_to(self.root).parts):
+                    continue
+                rel = py.relative_to(self.root).as_posix()
+                try:
+                    tree = ast.parse(py.read_text(encoding="utf-8"))
+                except SyntaxError as exc:
+                    self.parse_findings.append(
+                        Finding(
+                            rule="parse",
+                            path=rel,
+                            line=exc.lineno or 0,
+                            symbol="",
+                            message=f"file does not parse: {exc.msg}",
+                        )
+                    )
+                    continue
+                self.modules[rel] = ModuleIndex(rel, tree)
+        # name -> every function with that name, across the src/ tree only
+        # (call resolution never follows edges into tests/benchmarks).
+        # Functions nested inside another function are excluded: they are
+        # local names, unreachable by attribute/name from any other scope,
+        # so letting them shadow a module-level or method name (e.g. a
+        # worker-side local `now()` vs `ScaledClock.now`) only fabricates
+        # edges that cannot exist.
+        self._by_name: Dict[str, List[FunctionInfo]] = {}
+        for mod in self.modules.values():
+            if not mod.path.startswith("src/"):
+                continue
+            for fn in mod.functions:
+                if fn.parent is not None:
+                    continue
+                self._by_name.setdefault(fn.name, []).append(fn)
+
+    def src_functions(self, prefix: str = "src/") -> List[FunctionInfo]:
+        out: List[FunctionInfo] = []
+        for mod in self.modules.values():
+            if mod.path.startswith(prefix):
+                out.extend(mod.functions)
+        return out
+
+    def resolve_call(self, name: str) -> List[FunctionInfo]:
+        """Every src/ function a call to ``name`` might reach.
+
+        Name-based over-approximation: ``pool.kill_worker(...)`` resolves
+        to *every* ``kill_worker`` in ``src/`` — exactly what a
+        multi-implementation interface (``Transport``) needs, at the cost
+        of occasionally traversing an unrelated same-named function.
+        """
+        return self._by_name.get(name, [])
+
+    def module(self, rel_path: str) -> Optional[ModuleIndex]:
+        return self.modules.get(rel_path)
+
+
+def load_packaged_json(filename: str) -> dict:
+    """Load a JSON data file shipped inside ``repro.analysis``."""
+    here = Path(__file__).resolve().parent
+    with open(here / filename, encoding="utf-8") as fh:
+        return json.load(fh)

@@ -1,0 +1,182 @@
+"""R5 — determinism lint over the ``core/`` simulation paths.
+
+The tick-for-tick equivalence suite (and every pinned scenario metric)
+assumes ``core.sim`` and ``core.sim_reference`` are pure functions of
+``(stream, config, seed)``.  Three classes of construct silently break
+that:
+
+- **wall-clock reads** — ``time.time()``/``monotonic()``/
+  ``perf_counter()`` (and ``datetime.now``) leak host timing into
+  results;
+- **ambient RNG** — the stdlib ``random`` module and numpy's legacy
+  global-state API (``np.random.normal`` etc.) draw from hidden, shared
+  state; even ``np.random.default_rng()`` *without a seed* is
+  nondeterministic.  All randomness must flow through a
+  ``default_rng(seed)`` generator handed down explicitly;
+- **set-order iteration** — ``for x in {…}`` / ``in set(...)`` iterates
+  in hash order, which varies across runs with ``PYTHONHASHSEED``; sets
+  must be sorted before iteration (dicts are insertion-ordered and
+  fine).
+
+Scope: every file under ``src/repro/core/`` — the packers, profiler,
+predictor, IRM, both simulators, and the Spark baseline all sit on the
+equivalence-pinned path.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .model import Finding, RepoIndex
+
+__all__ = ["check_determinism"]
+
+CORE_PREFIX = "src/repro/core/"
+
+_WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "datetime.now",
+    "datetime.utcnow",
+    "datetime.today",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+}
+
+#: The only members of ``np.random`` that are deterministic-by-design
+#: (explicit generator construction / seeding machinery).
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_set_expr(node: ast.expr) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("set", "frozenset")
+    return False
+
+
+def check_determinism(index: RepoIndex, root) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in index.modules.values():
+        if not mod.path.startswith(CORE_PREFIX):
+            continue
+        # does this module import the stdlib random module (and under
+        # what name)?  numpy-as-np is assumed by repo convention.
+        random_aliases = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        random_aliases.add(alias.asname or "random")
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted in _WALL_CLOCK:
+                    findings.append(
+                        Finding(
+                            rule="R5",
+                            path=mod.path,
+                            line=node.lineno,
+                            symbol="",
+                            message=(
+                                f"wall-clock read {dotted}() on the sim path; "
+                                f"core/ results must be a pure function of "
+                                f"(stream, config, seed)"
+                            ),
+                        )
+                    )
+                elif dotted is not None:
+                    head, _, rest = dotted.partition(".")
+                    if head in random_aliases:
+                        findings.append(
+                            Finding(
+                                rule="R5",
+                                path=mod.path,
+                                line=node.lineno,
+                                symbol="",
+                                message=(
+                                    f"stdlib global RNG call {dotted}(); use an "
+                                    f"explicit np.random.default_rng(seed) "
+                                    f"generator threaded through the config"
+                                ),
+                            )
+                        )
+                    elif (
+                        head in ("np", "numpy")
+                        and rest.startswith("random.")
+                        and rest.split(".")[1] not in _NP_RANDOM_OK
+                    ):
+                        findings.append(
+                            Finding(
+                                rule="R5",
+                                path=mod.path,
+                                line=node.lineno,
+                                symbol="",
+                                message=(
+                                    f"numpy legacy global-state RNG {dotted}(); "
+                                    f"draw from a seeded default_rng generator "
+                                    f"instead"
+                                ),
+                            )
+                        )
+                    if dotted.endswith("default_rng") and not node.args:
+                        findings.append(
+                            Finding(
+                                rule="R5",
+                                path=mod.path,
+                                line=node.lineno,
+                                symbol="",
+                                message=(
+                                    "unseeded default_rng() on the sim path — "
+                                    "pass the config's seed explicitly"
+                                ),
+                            )
+                        )
+            elif isinstance(node, ast.For) and _is_set_expr(node.iter):
+                findings.append(
+                    Finding(
+                        rule="R5",
+                        path=mod.path,
+                        line=node.lineno,
+                        symbol="",
+                        message=(
+                            "iteration over a set is hash-order-dependent "
+                            "(varies with PYTHONHASHSEED); sort it or use an "
+                            "insertion-ordered dict"
+                        ),
+                    )
+                )
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)):
+                for comp in node.generators:
+                    if _is_set_expr(comp.iter):
+                        findings.append(
+                            Finding(
+                                rule="R5",
+                                path=mod.path,
+                                line=node.lineno,
+                                symbol="",
+                                message=(
+                                    "comprehension over a set is hash-order-"
+                                    "dependent (varies with PYTHONHASHSEED); "
+                                    "sort it first"
+                                ),
+                            )
+                        )
+    return findings

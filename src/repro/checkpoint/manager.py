@@ -147,7 +147,7 @@ class CheckpointManager:
             else [None] * len(flat_target)
         )
         out = []
-        for name, tgt, shd in zip(names, flat_target, flat_shard):
+        for name, tgt, shd in zip(names, flat_target, flat_shard, strict=True):
             info = by_name.get(name)
             if info is None:
                 raise KeyError(f"checkpoint {path} is missing leaf {name!r}")

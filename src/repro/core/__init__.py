@@ -40,7 +40,10 @@ from .profiler import MasterProfiler, ProfilerConfig, WorkerProbe
 from .queues import AllocationQueue, ContainerQueue, HostRequest
 from .sim import SimCluster, SimConfig, SimResult, simulate
 from .view_conformance import verify_cluster_view
-from .sim_reference import ReferenceSimCluster, simulate_reference
+
+# NOTE: core.sim_reference (the frozen pre-refactor simulator) is NOT
+# re-exported here.  Rule R3 (`python -m repro.analysis`) restricts its
+# import to the equivalence/parity suites; everyone else uses `simulate`.
 from .spark_baseline import SparkConfig, SparkResult, simulate_spark
 from .workloads import Message, Stream, synthetic_workload, usecase_workload
 
@@ -95,8 +98,6 @@ __all__ = [
     "SimConfig",
     "SimResult",
     "simulate",
-    "ReferenceSimCluster",
-    "simulate_reference",
     "SparkConfig",
     "SparkResult",
     "simulate_spark",

@@ -262,7 +262,7 @@ class BinPackingManager:
             items.append(VectorItem(tuple(float(s) for s in size), tag=req.req_id))
         result = packer.pack(items)
         placements: List[HostRequest] = []
-        for req, idx in zip(requests, result.assignments):
+        for req, idx in zip(requests, result.assignments, strict=True):
             req.target_worker = idx
             placements.append(req)
 
@@ -449,14 +449,14 @@ class BinPackingManager:
         self._inc_frontier = np.unique(assignments)
 
         placements: List[HostRequest] = []
-        for req, idx in zip(requests, assignments):
+        for req, idx in zip(requests, assignments, strict=True):
             req.target_worker = int(idx)
             placements.append(req)
 
         used = packer.used_matrix()
         used_bins = int((used > 1e-9).any(axis=1).sum())
         ideal = 0
-        for total, c in zip(used.sum(axis=0).tolist(), cap_vec.tolist()):
+        for total, c in zip(used.sum(axis=0).tolist(), cap_vec.tolist(), strict=True):
             if total > 0:
                 ideal = max(ideal, max(1, int(math.ceil(total / c - _EPS))))
         target = used_bins + (

@@ -432,16 +432,16 @@ class VectorBin:
 
     @property
     def free(self) -> tuple[float, ...]:
-        return tuple(c - u for c, u in zip(self.capacity, self.used))
+        return tuple(c - u for c, u in zip(self.capacity, self.used, strict=True))
 
     def fits(self, sizes: Sequence[float]) -> bool:
-        return all(s <= f + _EPS for s, f in zip(sizes, self.free))
+        return all(s <= f + _EPS for s, f in zip(sizes, self.free, strict=True))
 
     def add(self, item: VectorItem) -> None:
         if not self.fits(item.sizes):
             raise ValueError("vector item does not fit")
         self.items.append(item)
-        self.used = tuple(u + s for u, s in zip(self.used, item.sizes))
+        self.used = tuple(u + s for u, s in zip(self.used, item.sizes, strict=True))
 
 
 def _normalize_capacity(capacity) -> tuple[float, ...]:
@@ -478,7 +478,7 @@ class VectorAnyFit:
 
     # -- shared loop --------------------------------------------------------
     def pack_one(self, item: VectorItem) -> int:
-        if any(s > c + _EPS for s, c in zip(item.sizes, self.capacity)):
+        if any(s > c + _EPS for s, c in zip(item.sizes, self.capacity, strict=True)):
             raise ValueError(
                 f"item sizes {item.sizes} exceed bin capacity {self.capacity}"
             )
@@ -528,9 +528,9 @@ class VectorFirstFit(VectorAnyFit):
 
     def _score(self, b: VectorBin, item: VectorItem) -> float:
         if self.heuristic == "dot":
-            return sum(u * s for u, s in zip(b.used, item.sizes))
+            return sum(u * s for u, s in zip(b.used, item.sizes, strict=True))
         # l2: negative residual norm (maximize => minimize residual)
-        resid = [f - s for f, s in zip(b.free, item.sizes)]
+        resid = [f - s for f, s in zip(b.free, item.sizes, strict=True)]
         return -math.sqrt(sum(r * r for r in resid))
 
     def _choose(self, item: VectorItem) -> Optional[int]:
@@ -559,7 +559,7 @@ class VectorBestFit(VectorAnyFit):
                 continue
             resid = sum(
                 (f - s) / c
-                for f, s, c in zip(b.free, item.sizes, b.capacity)
+                for f, s, c in zip(b.free, item.sizes, b.capacity, strict=True)
             )
             if resid < best_resid:
                 best, best_resid = i, resid
@@ -626,7 +626,7 @@ class VectorFirstFitDecreasing:
         caps = [max(c, 1e-12) for c in self.capacity]
 
         def dominant(it: VectorItem) -> float:
-            return max(s / c for s, c in zip(it.sizes, caps))
+            return max(s / c for s, c in zip(it.sizes, caps, strict=True))
 
         order = sorted(range(len(items)), key=lambda i: -dominant(items[i]))
         before = len(self.bins)
@@ -889,7 +889,7 @@ class NumpyPacker:
         before = self._n
         if self.policy == "vector-ffd":
             for it in items:
-                if any(x > c + _EPS for x, c in zip(it.sizes, self.capacity)):
+                if any(x > c + _EPS for x, c in zip(it.sizes, self.capacity, strict=True)):
                     raise ValueError(
                         f"item sizes {it.sizes} exceed bin capacity "
                         f"{self.capacity}"
@@ -953,7 +953,7 @@ def vector_lower_bound(
         for d, s in enumerate(sizes):
             totals[d] += s
     best = 0
-    for total, cap in zip(totals, caps):
+    for total, cap in zip(totals, caps, strict=True):
         if total > 0:
             best = max(best, max(1, int(math.ceil(total / cap - _EPS))))
     return best

@@ -89,7 +89,7 @@ class Resources:
         return tuple(float(x) for x in self.values)
 
     def as_dict(self) -> Mapping[str, float]:
-        return {d: float(v) for d, v in zip(self.dims, self.values)}
+        return {d: float(v) for d, v in zip(self.dims, self.values, strict=True)}
 
     def to_float(self) -> float:
         """The scalar CPU fraction; only valid for 1-D vectors."""
@@ -170,7 +170,7 @@ class Resources:
     __hash__ = None  # mutable ndarray inside; value type, not a dict key
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        body = ", ".join(f"{d}={v:.3f}" for d, v in zip(self.dims, self.values))
+        body = ", ".join(f"{d}={v:.3f}" for d, v in zip(self.dims, self.values, strict=True))
         return f"Resources({body})"
 
 

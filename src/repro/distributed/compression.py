@@ -66,7 +66,7 @@ class GradCompressor:
         keys = jax.random.split(jax.random.PRNGKey(self.seed), len(leaves))
         outs = [
             self._quant_one(g, e, k)
-            for g, e, k in zip(leaves, err_leaves, keys)
+            for g, e, k in zip(leaves, err_leaves, keys, strict=True)
         ]
         new_grads = jax.tree.unflatten(treedef, [o[0] for o in outs])
         new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])

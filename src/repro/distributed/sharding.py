@@ -155,7 +155,7 @@ def axes_to_pspec(
     used: set = set()
     entries = [
         _resolve_dim(name, size, rules, mesh, used)
-        for name, size in zip(axes, shape)
+        for name, size in zip(axes, shape, strict=True)
     ]
     return P(*entries)
 

@@ -364,7 +364,7 @@ def analyze_module(
                     for w in m.group(1).split("x"):
                         window *= int(w)
                 total.flops += 2.0 * _numel(rdims) * window
-            elif oc.rstrip("-start") in _COLLECTIVES or oc in _COLLECTIVES:
+            elif oc.removesuffix("-start") in _COLLECTIVES:
                 base = oc[:-6] if oc.endswith("-start") else oc
                 if base not in _COLLECTIVES:
                     continue

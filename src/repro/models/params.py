@@ -72,7 +72,7 @@ def init_params(
     leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
     keys = jax.random.split(key, len(leaves))
     arrays = [
-        _init_one(k, s, dtype or s.dtype) for k, s in zip(keys, leaves)
+        _init_one(k, s, dtype or s.dtype) for k, s in zip(keys, leaves, strict=True)
     ]
     return jax.tree.unflatten(treedef, arrays)
 

@@ -29,6 +29,7 @@ from __future__ import annotations
 from typing import Set
 
 from ..core.sim import SimConfig
+from .annotations import loop_only
 from .clock import ScaledClock
 from .worker import WorkerPool
 
@@ -53,6 +54,7 @@ class Lifecycle:
         # stamps ``ready_t`` with tick time for the same reason.
         self.nominal_t = 0.0
 
+    @loop_only
     def kill_worker(self, idx: int) -> int:
         """Inject a worker failure; returns how many messages requeued.
 
@@ -70,6 +72,7 @@ class Lifecycle:
             self.pool.master.requeue(m)
         return len(harvested)
 
+    @loop_only
     def scale_workers(self, target: int) -> None:
         self.requested_target = target
         cfg = self.cfg

@@ -28,6 +28,8 @@ import asyncio
 import time
 from typing import Callable, Dict
 
+from .annotations import worker_side
+
 __all__ = ["SleepPayload", "JaxPayload", "make_payload", "PAYLOADS"]
 
 
@@ -39,6 +41,7 @@ class SleepPayload:
     async def __call__(self, msg, clock) -> None:
         await clock.sleep(msg.duration)
 
+    @worker_side
     def run_sync(self, msg, time_scale: float) -> None:
         """Blocking variant for a transport's worker-process PE thread."""
         if msg.duration > 0:
@@ -77,6 +80,7 @@ class JaxPayload:
         self._sizes = jnp.full((experts,), rows, jnp.int32)
         self._compute()  # warm the jit cache outside any message's budget
 
+    @worker_side
     def _compute(self) -> None:
         self._gmm(self._x, self._w, self._sizes, use_kernel=False).block_until_ready()
 
@@ -87,6 +91,7 @@ class JaxPayload:
         spent_virtual = (time.perf_counter() - wall0) / clock.time_scale
         await clock.sleep(msg.duration - spent_virtual)
 
+    @worker_side
     def run_sync(self, msg, time_scale: float) -> None:
         """Blocking variant for a transport's worker-process PE thread:
         the kernel runs on the PE thread itself (that *is* the worker's

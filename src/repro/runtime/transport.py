@@ -63,6 +63,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ..core.sim import PEState, WorkerState
 from ..core.workloads import Message
+from .annotations import loop_only, worker_side
 
 __all__ = [
     "Transport",
@@ -200,6 +201,7 @@ class InProcTransport(Transport):
             else:
                 pool._pe_total -= 1
 
+    @loop_only
     def kill_worker(self, worker) -> List[Message]:
         """Cancel the victim's PE tasks synchronously on the loop thread.
 
@@ -259,6 +261,7 @@ def _proc_cpu_seconds() -> float:
     return t.user + t.system
 
 
+@worker_side
 def _mp_worker_main(
     widx: int,
     cmd_q,
@@ -428,6 +431,7 @@ class MultiprocTransport(Transport):
             self._poll_loop(), name="transport-poller"
         )
 
+    @loop_only
     def start_worker(self, worker) -> None:
         pool = self.pool
         cfg = pool.cfg
@@ -449,22 +453,25 @@ class MultiprocTransport(Transport):
         self._procs[worker.idx] = _ProcHandle(proc, cmd_q, data_q)
         self.workers_spawned += 1
 
+    @loop_only
     def stop_worker(self, worker) -> None:
         # scale-down only retires PE-less workers, so the data channel is
         # quiet; park the handle for close() to join
         h = self._procs.pop(worker.idx, None)
         if h is not None:
-            h.cmd_q.put((_CMD_STOP,))
+            h.cmd_q.put_nowait((_CMD_STOP,))
             self._retired.append(h)
 
+    @loop_only
     def spawn_pe(self, worker, pe) -> None:
         h = self._procs.get(worker.idx)
         if h is None:  # pragma: no cover - placement gates on ACTIVE state
             raise RuntimeError(f"worker {worker.idx} has no backing process")
         h.pes[pe.uid] = pe
-        h.cmd_q.put((_CMD_START_PE, pe.uid, pe.image))
+        h.cmd_q.put_nowait((_CMD_START_PE, pe.uid, pe.image))
 
     # ---- the data-channel consumer ----------------------------------------
+    @loop_only
     async def _poll_loop(self) -> None:
         try:
             while True:
@@ -484,6 +491,7 @@ class MultiprocTransport(Transport):
         except asyncio.CancelledError:
             pass
 
+    @loop_only
     def _handle_event(self, widx: int, h: _ProcHandle, ev: tuple) -> None:
         pool = self.pool
         tag = ev[0]
@@ -508,6 +516,7 @@ class MultiprocTransport(Transport):
             else:
                 pool._pe_total -= 1
 
+    @loop_only
     def _on_pull(self, widx: int, h: _ProcHandle, pe) -> None:
         """The master side of a P2P pull: atomically peek the FIFO head,
         run the vector congestion gate against the mirror state, and ship
@@ -522,7 +531,7 @@ class MultiprocTransport(Transport):
             or worker.state is not WorkerState.ACTIVE
             or not pool._gate_ok(worker, head)
         ):
-            h.cmd_q.put((_CMD_REPLY, pe.uid, None))
+            h.cmd_q.put_nowait((_CMD_REPLY, pe.uid, None))
             return
         msg = master.pull(pe.image)
         assert msg is head
@@ -534,8 +543,9 @@ class MultiprocTransport(Transport):
         self.serialize_ms += (time.perf_counter() - w0) * 1e3
         self.data_msgs_out += 1
         self.data_bytes_out += len(blob)
-        h.cmd_q.put((_CMD_REPLY, pe.uid, blob))
+        h.cmd_q.put_nowait((_CMD_REPLY, pe.uid, blob))
 
+    @loop_only
     def _on_complete(self, widx: int, h: _ProcHandle, pe, ev: tuple) -> None:
         _, _, blob, start_t, done_t, cpu_s, encode_ms, proc_cpu_s = ev
         pool = self.pool
@@ -565,6 +575,7 @@ class MultiprocTransport(Transport):
         pe.idle_since = pool.clock.now()
         pool.master.complete(msg)
 
+    @loop_only
     def _account_cpu(
         self, worker, pe, msg: Message, cpu_s: float, busy_virtual_s: float
     ) -> None:
@@ -603,6 +614,12 @@ class MultiprocTransport(Transport):
                 counts[pe.image] = 1
 
     # ---- failure injection -------------------------------------------------
+    @loop_only(blocking=(
+        "kill path deliberately stalls the loop: the SIGKILL'd process must "
+        "be reaped and its data channel tail-drained synchronously so no "
+        "completion can race the harvest (the poller is parked, not a "
+        "second consumer)"
+    ))
     def kill_worker(self, worker) -> List[Message]:
         """SIGKILL the worker process, then settle the data channel.
 
@@ -647,6 +664,10 @@ class MultiprocTransport(Transport):
         return harvested
 
     # ---- teardown ----------------------------------------------------------
+    @loop_only(blocking=(
+        "teardown after the run: joins worker processes with bounded "
+        "timeouts once the clock has stopped and no payload is in flight"
+    ))
     async def close(self) -> None:
         if self._poller is not None:
             self._poller.cancel()

@@ -41,6 +41,7 @@ from ..core.profiler import WorkerProbe
 from ..core.queues import HostRequest
 from ..core.sim import PEState, SimConfig, WorkerState
 from ..core.workloads import Message
+from .annotations import loop_only
 from .clock import ScaledClock
 from .master import Master
 from .transport import InProcTransport, Transport
@@ -136,6 +137,7 @@ class WorkerPool:
         self._pe_total = 0
 
     # ---- lifecycle hooks (called by Lifecycle / the driver) ----------------
+    @loop_only
     def promote_booted(self, t: float) -> None:
         """BOOTING → ACTIVE once the boot delay has elapsed."""
         if not self._booting:
@@ -163,6 +165,7 @@ class WorkerPool:
         return self._active_idx
 
     # ---- scaling actuation (called by Lifecycle) ---------------------------
+    @loop_only
     def add_worker(self, t: float) -> LiveWorker:
         """Append a fresh worker slot and register it in the indices."""
         w = LiveWorker(len(self.workers), t, self.cfg.worker_boot_delay)
@@ -193,6 +196,7 @@ class WorkerPool:
             return w
         return None
 
+    @loop_only
     def reboot_slot(self, w: LiveWorker, ready_t: float) -> None:
         """OFF → BOOTING on a slot returned by ``lowest_off_slot``."""
         assert self._off_heap and self._off_heap[0] == w.idx
@@ -203,6 +207,7 @@ class WorkerPool:
         self._n_alive += 1
         self.transport.start_worker(w)
 
+    @loop_only
     def deactivate(self, w: LiveWorker) -> None:
         """ACTIVE → OFF (scale-down of an empty worker)."""
         w.state = WorkerState.OFF
@@ -211,6 +216,7 @@ class WorkerPool:
         self._n_alive -= 1
         self.transport.stop_worker(w)
 
+    @loop_only
     def kill_worker(self, idx: int) -> List[Message]:
         """Abruptly terminate a worker and harvest the messages it was
         processing.
@@ -243,6 +249,7 @@ class WorkerPool:
         return harvested
 
     # ---- placement actuation ----------------------------------------------
+    @loop_only
     def try_start_pe(self, req: HostRequest) -> bool:
         """Start a PE on the placed worker; False while the VM still boots."""
         idx = req.target_worker

@@ -322,4 +322,4 @@ def sweep_policies(
         # raises KeyError there even though the parent resolved it.  Fall
         # back to the serial loop rather than crash.
         return {p: run_scenario(scn, policy=p, **kwargs) for p in policies}
-    return {p: r for p, r in zip(policies, results)}
+    return {p: r for p, r in zip(policies, results, strict=True)}

@@ -325,7 +325,7 @@ def microscopy_mem_workload(
             arrival=0.0,
             resources={"mem": float(mem)},
         )
-        for d, mem in zip(durations, mems)
+        for d, mem in zip(durations, mems, strict=True)
     ]
     return Stream(batches=[(0.0, msgs)])
 

@@ -1,0 +1,347 @@
+"""The invariant checker checks itself: per-rule fixtures + the real tree.
+
+Two halves:
+
+1. **Fixtures** — for each rule R1–R5, a minimal synthetic repo tree
+   (written under ``tmp_path`` in the same ``src/repro/...`` layout the
+   checker walks) containing exactly one violation, proving the rule
+   *fires*.  A checker that silently stops matching would otherwise keep
+   returning "clean" forever — these are the checker's regression tests.
+2. **The gate** — ``test_real_tree_is_clean`` runs every rule over this
+   repository and applies the committed baseline; it is the tier-1
+   wrapper of the CI ``analysis`` job, so a new invariant violation fails
+   the ordinary test suite even before CI runs the standalone checker.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    DEFAULT_BASELINE_NAME,
+    RULES,
+    apply_baseline,
+    load_baseline,
+    run_analysis,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.runtime.annotations import loop_only, worker_side
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _write_tree(root: Path, files: dict) -> Path:
+    for rel, content in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content, encoding="utf-8")
+    return root
+
+
+def _messages(findings, rule):
+    return [f.message for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# R1 — blocking-in-async
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_r1_fires_on_blocking_call_in_async(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "import time\n"
+            "async def tick():\n"
+            "    time.sleep(1.0)\n"
+        ),
+    })
+    found = run_analysis(tmp_path, rules=["R1"])
+    msgs = _messages(found, "R1")
+    assert len(msgs) == 1
+    assert "time.sleep" in msgs[0]
+    assert found[0].symbol == "tick"
+
+
+@pytest.mark.timeout(30)
+def test_r1_fires_on_loop_call_into_worker_side(tmp_path):
+    """The annotation vocabulary is enforced at call-graph boundaries: an
+    edge from loop-reachable code into @worker_side is itself a finding."""
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "from repro.runtime.annotations import worker_side\n"
+            "@worker_side\n"
+            "def grind():\n"
+            "    pass\n"
+            "async def tick():\n"
+            "    grind()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R1"]), "R1")
+    assert len(msgs) == 1
+    assert "@worker_side" in msgs[0] and "grind" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_r1_exempts_annotated_deliberate_stall(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "import time\n"
+            "from repro.runtime.annotations import loop_only\n"
+            "@loop_only(blocking='teardown join after the clock stopped')\n"
+            "def drain():\n"
+            "    time.sleep(0.1)\n"
+            "async def tick():\n"
+            "    drain()\n"
+        ),
+    })
+    assert _messages(run_analysis(tmp_path, rules=["R1"]), "R1") == []
+
+
+# ---------------------------------------------------------------------------
+# R2 — single-consumer / thread affinity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_r2_fires_on_unannotated_mirror_mutation(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "def poke(pe):\n"
+            "    pe.state = 2\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R2"]), "R2")
+    assert len(msgs) == 1
+    assert "pe.state" in msgs[0] and "@loop_only" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_r2_fires_on_second_data_channel_consumer(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "def steal(data_q):\n"
+            "    return data_q.get_nowait()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R2"]), "R2")
+    assert len(msgs) == 1
+    assert "single-consumer" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_r2_fires_on_contradictory_annotations(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/mod.py": (
+            "from repro.runtime.annotations import loop_only, worker_side\n"
+            "@loop_only\n"
+            "@worker_side\n"
+            "def confused():\n"
+            "    pass\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R2"]), "R2")
+    assert any("both @loop_only and @worker_side" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# R3 — frozen-reference guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_r3_fires_on_modified_frozen_file(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/sim_reference.py": "# a drive-by edit\n",
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R3"]), "R3")
+    assert any("frozen file modified" in m for m in msgs)
+    assert any("re-pin the hash" in m for m in msgs)
+
+
+@pytest.mark.timeout(30)
+def test_r3_fires_on_import_outside_allowlist(tmp_path):
+    ref = (REPO_ROOT / "src/repro/core/sim_reference.py").read_text()
+    found = run_analysis(_write_tree(tmp_path, {
+        "src/repro/core/sim_reference.py": ref,  # pinned content: no hash hit
+        "src/repro/runtime/sneaky.py": (
+            "from repro.core.sim_reference import simulate_reference\n"
+        ),
+    }), rules=["R3"])
+    assert [f.path for f in found] == ["src/repro/runtime/sneaky.py"]
+    assert "allowlist" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# R4 — wire-contract drift
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_r4_fires_on_unregistered_field(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/scenarios/streams.py": (
+            "from dataclasses import dataclass\n"
+            "@dataclass\n"
+            "class Message:\n"
+            "    image: str\n"
+            "    duration: float\n"
+            "    cpu_cores: float\n"
+            "    arrival: float\n"
+            "    resources: dict\n"
+            "    msg_id: int\n"
+            "    start_t: float\n"
+            "    done_t: float\n"
+            "    smuggled: bytes\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R4"]), "R4")
+    assert any(
+        "drift" in m and "'smuggled'" in m and "wire_manifest.json" in m
+        for m in msgs
+    )
+
+
+@pytest.mark.timeout(30)
+def test_r4_fires_on_stale_manifest_entry(tmp_path):
+    """The inverse direction: a registered field the class no longer has."""
+    _write_tree(tmp_path, {
+        "src/repro/scenarios/streams.py": (
+            "from dataclasses import dataclass\n"
+            "@dataclass\n"
+            "class Message:\n"
+            "    image: str\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R4"]), "R4")
+    assert any("stale wire manifest" in m and "duration" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# R5 — determinism lint
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_r5_fires_on_wall_clock_read(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/mod.py": (
+            "import time\n"
+            "def stamp():\n"
+            "    return time.time()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R5"]), "R5")
+    assert len(msgs) == 1
+    assert "wall-clock read time.time()" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_r5_fires_on_unseeded_rng_and_set_iteration(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/mod.py": (
+            "import numpy as np\n"
+            "def draw(images):\n"
+            "    rng = np.random.default_rng()\n"
+            "    for img in set(images):\n"
+            "        rng.random()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R5"]), "R5")
+    assert any("unseeded default_rng()" in m for m in msgs)
+    assert any("hash-order-dependent" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure: parse findings, baseline semantics, annotations, CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_unparseable_file_is_a_finding_not_a_gap(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/broken.py": "def oops(:\n",
+    })
+    found = run_analysis(tmp_path, rules=["R5"])
+    assert [f.rule for f in found] == ["parse"]
+
+
+@pytest.mark.timeout(30)
+def test_baseline_suppresses_by_key_and_reports_stale(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/mod.py": (
+            "import time\n"
+            "def stamp():\n"
+            "    return time.time()\n"
+        ),
+    })
+    found = run_analysis(tmp_path, rules=["R5"])
+    assert len(found) == 1
+    entry = {
+        "rule": found[0].rule,
+        "path": found[0].path,
+        "symbol": found[0].symbol,
+        "message": found[0].message,
+    }
+    active, suppressed, stale = apply_baseline(found, [entry])
+    assert active == [] and len(suppressed) == 1 and stale == []
+    # a suppression whose finding is gone must surface as stale
+    active, suppressed, stale = apply_baseline([], [entry])
+    assert stale == [entry]
+
+
+@pytest.mark.timeout(30)
+def test_annotations_are_transparent_identity_decorators():
+    @worker_side
+    def a():
+        return 1
+
+    @loop_only
+    def b():
+        return 2
+
+    @loop_only(blocking="why")
+    def c():
+        return 3
+
+    assert (a(), b(), c()) == (1, 2, 3)
+    assert a.__worker_side__ and b.__loop_only__ and c.__loop_only__
+    assert c.__loop_blocking_reason__ == "why"
+
+
+# ---------------------------------------------------------------------------
+# The gate: the real tree is clean (tier-1 wrapper of the CI analysis job)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_real_tree_is_clean():
+    findings = run_analysis(REPO_ROOT)
+    suppressions = load_baseline(REPO_ROOT / DEFAULT_BASELINE_NAME)
+    active, _, stale = apply_baseline(findings, suppressions)
+    details = "\n".join(
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}" for f in active
+    )
+    assert not active, (
+        f"invariant violations in the tree (fix them or, as a reviewed "
+        f"decision, suppress in {DEFAULT_BASELINE_NAME}):\n{details}"
+    )
+    assert not stale, f"stale baseline suppressions: {stale}"
+
+
+@pytest.mark.timeout(120)
+def test_cli_exit_codes_and_json_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = analysis_main([
+        "--root", str(REPO_ROOT), "--format", "json", "--out", str(out),
+    ])
+    capsys.readouterr()
+    assert rc == 0
+    import json
+
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert set(report["rules"]) == set(RULES)
+    assert report["findings"] == []
+    assert analysis_main(["--list-rules"]) == 0
+    capsys.readouterr()

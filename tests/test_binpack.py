@@ -176,7 +176,7 @@ def test_vector_firstfit_feasibility(pairs, heuristic):
             continue
         vff.pack_one(VectorItem((a, b)))
     for vb in vff.bins:
-        assert all(u <= c + 1e-9 for u, c in zip(vb.used, vb.capacity))
+        assert all(u <= c + 1e-9 for u, c in zip(vb.used, vb.capacity, strict=True))
 
 
 def test_vector_item_validation():

@@ -1,0 +1,38 @@
+"""Fast content-hash pin for the frozen reference simulator.
+
+``core/sim_reference.py`` is the pre-refactor simulator the equivalence
+suite (``tests/test_sim_equivalence.py``) pins ``repro.core.sim`` against
+tick for tick — its entire value is that it never changes.  The full
+checker (``python -m repro.analysis``, rule R3) enforces the same pin in
+CI; this unit test is the milliseconds-cheap tier-1 tripwire that fails
+the plain ``pytest`` run the moment the file is touched, without waiting
+for the analysis job.
+"""
+
+import hashlib
+import json
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+MANIFEST = REPO_ROOT / "src/repro/analysis/frozen_manifest.json"
+
+
+@pytest.mark.timeout(30)
+def test_frozen_reference_hash_matches_manifest():
+    manifest = json.loads(MANIFEST.read_text(encoding="utf-8"))
+    for entry in manifest["frozen"]:
+        target = REPO_ROOT / entry["path"]
+        assert target.is_file(), f"frozen file {entry['path']} is missing"
+        actual = hashlib.sha256(target.read_bytes()).hexdigest()
+        assert actual == entry["sha256"], (
+            f"{entry['path']} changed (sha256 {actual} != pinned "
+            f"{entry['sha256']}).  This file is the frozen reference the "
+            f"tick-for-tick equivalence contract in "
+            f"tests/test_sim_equivalence.py measures repro.core.sim "
+            f"against; editing it silently moves the goalposts for every "
+            f"pinned scenario.  If the change is genuinely intended, "
+            f"re-pin the hash in {MANIFEST.relative_to(REPO_ROOT)} in the "
+            f"same commit and justify it in the commit message."
+        )

@@ -144,7 +144,7 @@ def test_streaming_pipeline_prefetch_equivalent():
     sync_batches = [b.tokens for b in sync]
     pre_batches = [b.tokens for b in pre]
     assert len(sync_batches) == len(pre_batches)
-    for a, b in zip(sync_batches, pre_batches):
+    for a, b in zip(sync_batches, pre_batches, strict=True):
         np.testing.assert_array_equal(a, b)
 
 

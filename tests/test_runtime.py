@@ -101,7 +101,7 @@ def test_master_backlog_semantics_match_sim_cluster():
         master = Master()
         sim = SimCluster(SimConfig(), IRM())
         images = ["a", "b", "c"]
-        for step in range(300):
+        for _step in range(300):
             op = rng.integers(0, 3)
             img = images[int(rng.integers(0, len(images)))]
             if op == 0:
@@ -229,7 +229,7 @@ def test_backlog_demand_accumulator_matches_scan():
         rng = np.random.default_rng(3)
         images = ["a", "b", "c", "d"]
         assert cluster.backlog_resource_demand() is None  # empty backlog
-        for step in range(400):
+        for _step in range(400):
             op = rng.integers(0, 4)
             img = images[int(rng.integers(0, len(images)))]
             if op <= 1:  # bias toward pushes so the backlog exceeds 64

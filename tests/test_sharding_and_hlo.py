@@ -17,7 +17,7 @@ def abstract_mesh(shape, names):
     """AbstractMesh across jax versions: 0.4.x takes (name, size) pairs,
     newer jax takes positional (shape, names)."""
     try:
-        return AbstractMesh(tuple(zip(names, shape)))
+        return AbstractMesh(tuple(zip(names, shape, strict=True)))
     except TypeError:
         return AbstractMesh(shape, names)
 

@@ -17,7 +17,8 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.core import IRM, IRMConfig, SimConfig, simulate, simulate_reference
+from repro.core import IRM, IRMConfig, SimConfig, simulate
+from repro.core.sim_reference import simulate_reference
 from repro.core.workloads import usecase_workload
 from repro.scenarios import get_scenario, scenario_names
 
@@ -174,7 +175,7 @@ def test_deque_pull_matches_scan_seeded():
     for _ in range(50):
         ops = rng.choice(["arrive", "arrive", "pull", "fail"], size=300)
         imgs = rng.choice(images, size=300)
-        scan_out, deque_out = _run_trace(list(zip(ops, imgs)))
+        scan_out, deque_out = _run_trace(list(zip(ops, imgs, strict=True)))
         assert scan_out == deque_out
 
 

@@ -48,7 +48,7 @@ def test_lr_schedule_shape():
     assert lrs[-1] == pytest.approx(1e-4, rel=5e-2)  # min_lr floor
     # warmup is monotone increasing
     warm = [float(lr_at(cfg, jnp.asarray(s))) for s in range(11)]
-    assert all(b >= a for a, b in zip(warm, warm[1:]))
+    assert all(b >= a for a, b in zip(warm, warm[1:], strict=False))
 
 
 def test_loss_decreases_over_steps(tiny):
@@ -163,7 +163,7 @@ def test_checkpoint_roundtrip(tmp_path, tiny):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     mgr.save(10, {"p": params})
     restored = mgr.restore(10, {"p": params})
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["p"])):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["p"]), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -117,7 +117,7 @@ def test_vector_ffd_sorts_by_dominant_share():
     assert len(res.assignments) == 4
     # every item placed within capacity
     for b in ffd.bins:
-        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity))
+        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity, strict=True))
     # FFD packs no more bins than online first-fit on the same items
     vff = VectorFirstFit((1.0, 1.0))
     vff.pack(items)
@@ -183,7 +183,7 @@ def test_vector_packers_never_overflow_and_beat_lower_bound(pairs, name):
     items = [VectorItem(p) for p in pairs]
     res = packer.pack(items)
     for b in packer.bins:
-        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity))
+        assert all(u <= c + 1e-9 for u, c in zip(b.used, b.capacity, strict=True))
     assert res.num_bins >= vector_lower_bound(pairs, (1.0, 1.0))
     assert len(res.assignments) == len(items)
 

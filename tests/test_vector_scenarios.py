@@ -8,7 +8,8 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import simulate, simulate_reference
+from repro.core import simulate
+from repro.core.sim_reference import simulate_reference
 from repro.scenarios import (
     VECTOR_POLICIES,
     get_scenario,

@@ -125,6 +125,23 @@ def test_host_request_roundtrip_scalar_estimate():
 
 
 @pytest.mark.timeout(30)
+def test_host_request_roundtrip_queueing_fields():
+    """``enqueue_time`` (admission stamp) and ``source`` ("autoscale" |
+    "user" provenance) must survive the hop so a request that bounces off
+    a still-booting worker keeps its original admission time and origin
+    through the TTL-requeue loop."""
+    req = HostRequest(image="img/t", size_estimate=0.2, ttl=1,
+                      enqueue_time=42.5, source="user")
+    r = _roundtrip(req)
+    assert r.enqueue_time == 42.5
+    assert r.source == "user"
+    # defaults survive too: a fresh request round-trips as fresh
+    fresh = _roundtrip(HostRequest(image="img/t", size_estimate=0.2))
+    assert fresh.enqueue_time == 0.0
+    assert fresh.source == "autoscale"
+
+
+@pytest.mark.timeout(30)
 def test_host_request_roundtrip_vector_estimate():
     est = Resources(("cpu", "mem"), (0.3, 0.45))
     req = HostRequest(image="img/v", size_estimate=est)
