@@ -1,0 +1,168 @@
+"""Observability overhead: obs-on vs obs-off live throughput + self-check.
+
+The event bus is a guarded list append on the hot paths (pull, start,
+complete, IRM tick), and the ``full`` level additionally captures the
+allocator's per-run audit snapshot.  This benchmark quantifies what that
+costs where it matters — the live runtime's wall-clock throughput — and
+**gates** it: obs-enabled messages/s must stay within 10% of obs-off on
+the paper's microscopy use case, or the benchmark exits nonzero.
+
+It also closes the analyzer's loop as a self-check: the e2e latency
+p50/p95/p99 computed from the obs run's event log *alone*
+(``repro.obs.analyze.e2e_percentiles``) must equal the percentiles the
+``BENCH_runtime.json`` pipeline computes from the run's in-memory
+``Message`` list — byte-for-byte the same numbers, proving the event log
+carries everything the throughput benchmark measures.
+
+Writes ``BENCH_obs.json``:
+
+    {
+      "schema": "BENCH_obs/v1",
+      "smoke": false, "time_scale": 0.01, "scenario": "microscopy",
+      "obs_off": {"completed": ..., "wall_s": ..., "messages_per_s": ...},
+      "obs_on":  {..., "events": ..., "irm_pack_events": ...},
+      "overhead": {"messages_per_s_ratio": ..., "gate": 0.9, "ok": true},
+      "latency_selfcheck": {"p50": ..., "p95": ..., "p99": ...,
+                            "matches_pipeline": true},
+      "meta": {...}
+    }
+
+Usage:
+    PYTHONPATH=src python benchmarks/obs_overhead.py [--smoke] \
+        [--scenario microscopy] [--time-scale 0.01] [--out BENCH_obs.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs import EventBus
+from repro.obs.analyze import e2e_percentiles, validate_events
+from repro.runtime import RuntimeConfig, run_live
+from repro.scenarios import get_scenario
+
+#: obs-on live throughput must stay within 10% of obs-off.
+GATE_RATIO = 0.9
+
+
+def _run_once(name: str, *, smoke: bool, time_scale: float, obs: bool):
+    scn = get_scenario(name)
+    cfg = scn.sim_config()
+    overrides: Dict = {}
+    if smoke:
+        overrides = dict(scn.smoke_overrides or {})
+        if scn.smoke_t_max is not None:
+            cfg.t_max = scn.smoke_t_max
+    stream = scn.make_stream(0, **overrides)
+    stats: Dict = {}
+    bus = EventBus(level="full") if obs else None
+    res = run_live(
+        stream, cfg, irm_config=scn.irm_config(),
+        runtime=RuntimeConfig(time_scale=time_scale), stats=stats, bus=bus,
+    )
+    row = {
+        "completed": int(res.completed),
+        "total": int(res.total),
+        "wall_s": float(stats["wall_s"]),
+        "messages_per_s": float(stats["messages_per_s"]),
+        "makespan_s": float(res.makespan),
+    }
+    if bus is not None:
+        row["events"] = len(bus.events)
+        row["irm_pack_events"] = sum(
+            1 for e in bus.events if e["ev"] == "irm.pack"
+        )
+        row["schema_violations"] = validate_events(bus.events)
+    return row, res, bus
+
+
+def run(out: str = "BENCH_obs.json", *, smoke: bool = False,
+        scenario: str = "microscopy", time_scale: float = 0.01) -> Dict:
+    off_row, _, _ = _run_once(scenario, smoke=smoke, time_scale=time_scale,
+                              obs=False)
+    on_row, on_res, on_bus = _run_once(scenario, smoke=smoke,
+                                       time_scale=time_scale, obs=True)
+
+    ratio = on_row["messages_per_s"] / max(off_row["messages_per_s"], 1e-9)
+    ok = (
+        ratio >= GATE_RATIO
+        and on_row["completed"] >= 0.9 * on_row["total"]
+        and off_row["completed"] >= 0.9 * off_row["total"]
+        and not on_row["schema_violations"]
+    )
+
+    # analyzer self-check: event log alone reproduces the BENCH_runtime
+    # pipeline's latency percentiles
+    done = [m for m in on_res.messages if m.done_t >= 0]
+    lat = np.array([m.done_t - m.arrival for m in done]) if done else np.zeros(1)
+    pipeline = {p: float(np.percentile(lat, p)) for p in (50, 95, 99)}
+    from_log = e2e_percentiles(on_bus.events)
+    matches = all(
+        abs(from_log[f"p{p}"] - pipeline[p]) < 1e-9 for p in (50, 95, 99)
+    )
+    ok &= matches
+
+    result = {
+        "schema": "BENCH_obs/v1",
+        "smoke": bool(smoke),
+        "time_scale": time_scale,
+        "scenario": scenario,
+        "obs_off": off_row,
+        "obs_on": on_row,
+        "overhead": {
+            "messages_per_s_ratio": ratio,
+            "gate": GATE_RATIO,
+            "ok": bool(ok),
+        },
+        "latency_selfcheck": {
+            "p50": from_log["p50"], "p95": from_log["p95"],
+            "p99": from_log["p99"], "matches_pipeline": bool(matches),
+        },
+        "meta": {
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "platform": platform.platform(),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(
+        f"{scenario}: obs-off {off_row['messages_per_s']:.1f} msgs/s, "
+        f"obs-on {on_row['messages_per_s']:.1f} msgs/s "
+        f"(ratio {ratio:.3f}, gate {GATE_RATIO}), "
+        f"{on_row['events']} events, latency self-check "
+        f"{'ok' if matches else 'MISMATCH'}"
+    )
+    print(f"wrote {out}")
+    if not ok:
+        print("ERROR: overhead gate or self-check failed", file=sys.stderr)
+    return result
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/obs_overhead.py",
+        description="Observability overhead gate on the live runtime.",
+    )
+    ap.add_argument("--out", default="BENCH_obs.json",
+                    help="output JSON path (default: ./BENCH_obs.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long run on the scenario's smoke overrides")
+    ap.add_argument("--scenario", default="microscopy",
+                    help="registered scenario name")
+    ap.add_argument("--time-scale", type=float, default=0.01,
+                    help="wall seconds per scenario second")
+    args = ap.parse_args(argv)
+    result = run(args.out, smoke=args.smoke, scenario=args.scenario,
+                 time_scale=args.time_scale)
+    return 0 if result["overhead"]["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,9 @@ R4     wire contract: every class pickled across the transport has its
        by ``tests/test_wire_contract.py``
 R5     determinism: no wall-clock reads, ambient RNG, or set-order
        iteration in ``core/`` sim paths
+R6     event schema: every ``bus.emit`` call site in ``src/`` matches the
+       pinned field set in ``obs/event_manifest.json``, no manifest entry
+       is stale, and every entry is exercised by the schema test
 =====  ====================================================================
 
 Run it with ``python -m repro.analysis`` (see ``__main__.py``).  The
@@ -40,6 +43,7 @@ from .model import ANALYZED_TREES, Finding, RepoIndex
 from .rules_concurrency import check_affinity, check_blocking_in_async
 from .rules_contracts import check_frozen_reference, check_wire_contract
 from .rules_determinism import check_determinism
+from .rules_obs import check_event_schema
 
 __all__ = [
     "RULES",
@@ -73,6 +77,10 @@ RULES: Dict[str, tuple] = {
     "R5": (
         check_determinism,
         "no wall-clock, ambient RNG, or set-order iteration in core/",
+    ),
+    "R6": (
+        check_event_schema,
+        "bus-emitted event types pinned in the event-schema manifest + tested",
     ),
 }
 

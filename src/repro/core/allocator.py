@@ -104,6 +104,11 @@ class PackingRun:
     target_workers: int            # num_bins + idle buffer
     ideal_bins: int                # L1 lower bound for the packed load
     scheduled_load: List[ResourceLike]  # per-bin scheduled usage after the run
+    # decision-audit capture (observability plane; ``None`` unless the
+    # manager's ``audit`` flag is set): policy, dims, capacity, per-bin
+    # free vector *before* the run, per-item sizes/assignments/ids —
+    # everything ``repro.obs.audit`` needs to replay rejection reasons
+    audit: Optional[dict] = None
 
 
 class BinPackingManager:
@@ -113,6 +118,9 @@ class BinPackingManager:
         self.config = config or AllocatorConfig()
         self._last_run_t: Optional[float] = None
         self.runs: List[PackingRun] = []
+        # observability: capture the decision-audit snapshot per run
+        # (pure reads — decisions are identical with the flag on or off)
+        self.audit = False
         # incremental-repack cache (numpy engine): loads snapshot, the
         # derived pre-fill matrix min(load, cap), the capacity vector it was
         # built against, and the previous run's placement frontier
@@ -183,12 +191,22 @@ class BinPackingManager:
                 "use an Any-Fit algorithm for the IRM allocator"
             ) from None
 
+        # audit snapshot before pack_one mutates the bins
+        free_before = (
+            [[float(cfg.capacity - b.used)] for b in bins]
+            if self.audit else None
+        )
         placements: List[HostRequest] = []
+        audit_sizes: List[List[float]] = []
+        audit_assignments: List[int] = []
         for req in requests:
             size = min(max(req.size_estimate, 1e-3), cap)
             idx = packer.pack_one(Item(size=size, tag=req.req_id))
             req.target_worker = idx
             placements.append(req)
+            if self.audit:
+                audit_sizes.append([float(size)])
+                audit_assignments.append(int(idx))
 
         used_bins = sum(1 for b in packer.bins if b.used > 1e-9)
         total_load = sum(b.used for b in packer.bins)
@@ -202,9 +220,35 @@ class BinPackingManager:
             target_workers=target,
             ideal_bins=ideal,
             scheduled_load=[b.used for b in packer.bins],
+            audit=self._audit_record(
+                cfg.algorithm, ("cpu",), [float(cfg.capacity)],
+                free_before, audit_sizes, audit_assignments, requests,
+            ) if self.audit else None,
         )
         self.runs.append(run)
         return run
+
+    def _audit_record(
+        self,
+        policy: str,
+        dims,
+        capacity: List[float],
+        free_before,
+        sizes,
+        assignments,
+        requests: Sequence[HostRequest],
+    ) -> dict:
+        """The decision-audit snapshot ``repro.obs.audit`` replays."""
+        return {
+            "policy": policy,
+            "dims": list(dims),
+            "capacity": capacity,
+            "free_before": free_before,
+            "sizes": sizes,
+            "assignments": assignments,
+            "req_ids": [r.req_id for r in requests],
+            "images": [r.image for r in requests],
+        }
 
     # -- multi-resource packing run (paper Sec. VII future work) -------------
     def _resolve_dims(
@@ -252,6 +296,11 @@ class BinPackingManager:
         ]
         algorithm = vector_equivalent(cfg.algorithm)
         packer = make_packer(algorithm, capacity=tuple(cap), bins=bins)
+        # audit snapshot before pack() mutates the bins
+        free_before = (
+            [(cap - np.asarray(b.used)).tolist() for b in bins]
+            if self.audit else None
+        )
 
         items: List[VectorItem] = []
         for req in requests:
@@ -279,6 +328,11 @@ class BinPackingManager:
             target_workers=target,
             ideal_bins=ideal,
             scheduled_load=[Resources(dims, b.used) for b in packer.bins],
+            audit=self._audit_record(
+                algorithm, dims, [float(c) for c in cap], free_before,
+                [list(it.sizes) for it in items],
+                [int(a) for a in result.assignments], requests,
+            ) if self.audit else None,
         )
         self.runs.append(run)
         return run
@@ -440,6 +494,11 @@ class BinPackingManager:
             vector_equivalent(cfg.algorithm) if vector_mode else cfg.algorithm
         )
         prefill = self._numpy_prefill(loads_mat, cap_vec)
+        # audit snapshot: the packer adopts ``prefill`` as its live used
+        # matrix and mutates it, so the free view must be copied now
+        free_before = (
+            (cap_vec - prefill).tolist() if self.audit else None
+        )
         packer = NumpyPacker(
             algorithm,
             capacity=tuple(cap_vec) if vector_mode else float(cap_vec[0]),
@@ -477,6 +536,10 @@ class BinPackingManager:
             target_workers=target,
             ideal_bins=ideal,
             scheduled_load=scheduled,
+            audit=self._audit_record(
+                algorithm, dims, cap_vec.tolist(), free_before,
+                sizes.tolist(), [int(a) for a in assignments], requests,
+            ) if self.audit else None,
         )
         self.runs.append(run)
         return run

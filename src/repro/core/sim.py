@@ -56,6 +56,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs.audit import emit_packing_audit
 from .irm import IRM, IRMConfig
 from .profiler import WorkerProbe
 from .queues import HostRequest
@@ -200,9 +201,14 @@ class SimCluster:
     O(workers x PEs x queue).
     """
 
-    def __init__(self, config: SimConfig, irm: IRM):
+    def __init__(self, config: SimConfig, irm: IRM, bus=None):
         self.cfg = config
         self.irm = irm
+        # optional observability event bus (``bus.now`` stays None on the
+        # sim backend: events are stamped with the nominal tick).  Every
+        # emission is a guarded list append — no RNG, no float math — so
+        # the tick-for-tick trace is bit-identical with or without it.
+        self.bus = bus
         self.t = 0.0
         self.rng = np.random.default_rng(config.seed)
         self.workers: List[SimWorker] = []
@@ -267,6 +273,9 @@ class SimCluster:
             dq = self._img_queues[m.image] = deque()
         dq.append((self._seq_back, m))
         self._qlen += 1
+        if self.bus is not None:
+            self.bus.emit("msg.enqueued", msg_id=m.msg_id, image=m.image,
+                          arrival=m.arrival)
 
     def _push_front(self, m: Message) -> None:
         self._seq_front -= 1
@@ -379,6 +388,9 @@ class SimCluster:
                    req.size_estimate, uid=self._pe_uid)
         w.pes.append(pe)
         heapq.heappush(self._starting, (pe.ready_t, idx, pe.uid, pe))
+        if self.bus is not None:
+            self.bus.emit("pe.spawn", worker=idx, pe=pe.uid,
+                          image=req.image)
         return True
 
     def _lowest_off_slot(self) -> Optional[SimWorker]:
@@ -411,6 +423,9 @@ class SimCluster:
                 slot.state = WorkerState.BOOTING
                 slot.ready_t = self.t + self.cfg.worker_boot_delay
                 heapq.heappush(self._boot_heap, (slot.ready_t, slot.idx))
+                if self.bus is not None:
+                    self.bus.emit("worker.boot", worker=slot.idx,
+                                  ready_t=slot.ready_t)
             else:
                 w = SimWorker(
                     len(self.workers), self.t, self.cfg.worker_boot_delay
@@ -420,6 +435,9 @@ class SimCluster:
                     heapq.heappush(self._boot_heap, (w.ready_t, w.idx))
                 else:  # zero boot delay: born ACTIVE
                     insort(self._active_idx, w.idx)
+                if self.bus is not None:
+                    self.bus.emit("worker.boot", worker=w.idx,
+                                  ready_t=w.ready_t)
             n_alive += 1
         # deactivate empty workers above the target (highest index first)
         if n_alive > capped:
@@ -432,6 +450,8 @@ class SimCluster:
                     self._active_idx.remove(idx)
                     heapq.heappush(self._off_heap, idx)
                     n_alive -= 1
+                    if self.bus is not None:
+                        self.bus.emit("worker.deactivate", worker=idx)
         self._n_alive = n_alive
 
     # ---- simulation dynamics ---------------------------------------------------
@@ -441,6 +461,8 @@ class SimCluster:
         idx, when = self.cfg.fail_worker_at
         if self.t >= when and idx < len(self.workers) and idx not in self._failed:
             w = self.workers[idx]
+            n_pes = len(w.pes)
+            n_req = 0
             # in-flight messages are lost back to the master queue
             # (at-least-once); front-inserted one by one, so the last PE's
             # message ends up globally first — list.insert(0, m) semantics.
@@ -449,12 +471,19 @@ class SimCluster:
                     pe.msg.start_t = -1.0
                     self._push_front(pe.msg)
                     self.requeued += 1
+                    n_req += 1
+                    if self.bus is not None:
+                        self.bus.emit("msg.requeued", msg_id=pe.msg.msg_id,
+                                      image=pe.msg.image)
                 # purge from the indices: heap entries are skipped lazily
                 # once the state no longer matches.
                 self._idle.pop((w.idx, pe.uid), None)
                 pe.state = PEState.STOPPED
                 pe.msg = None
             w.pes = []
+            if self.bus is not None:
+                self.bus.emit("worker.kill", worker=idx, pes=n_pes,
+                              requeued=n_req)
             if w.state is not WorkerState.OFF:
                 if w.state is WorkerState.ACTIVE:
                     self._active_idx.remove(idx)
@@ -483,6 +512,8 @@ class SimCluster:
             if w.state is WorkerState.BOOTING and w.ready_t == rt:
                 w.state = WorkerState.ACTIVE
                 insort(self._active_idx, widx)
+                if self.bus is not None:
+                    self.bus.emit("worker.active", worker=widx)
 
         # STARTING -> IDLE.  Transition conditions depend only on t, so
         # draining the ready heap is order-equivalent to the reference
@@ -508,6 +539,12 @@ class SimCluster:
             self.completed.append(pe.msg)
             if pe.msg.done_t > self.max_done_t:
                 self.max_done_t = pe.msg.done_t
+            if self.bus is not None:
+                dm = pe.msg
+                self.bus.emit("msg.completed", msg_id=dm.msg_id,
+                              image=dm.image, worker=widx, pe=uid,
+                              start_t=dm.start_t, done_t=dm.done_t,
+                              arrival=dm.arrival)
             pe.msg = None
             pe.state = PEState.IDLE
             pe.idle_since = t
@@ -538,10 +575,20 @@ class SimCluster:
                     pe.state = PEState.BUSY
                     del self._idle[key]
                     heapq.heappush(bh, (m.done_t, key[0], key[1], pe, m))
+                    if self.bus is not None:
+                        self.bus.emit("msg.pulled", msg_id=m.msg_id,
+                                      image=m.image, worker=key[0],
+                                      pe=key[1])
+                        self.bus.emit("msg.started", msg_id=m.msg_id,
+                                      image=m.image, worker=key[0],
+                                      pe=key[1])
                 elif t - pe.idle_since >= timeout:
                     pe.state = PEState.STOPPED  # graceful self-termination
                     del self._idle[key]
                     self._dirty_workers.add(key[0])
+                    if self.bus is not None:
+                        self.bus.emit("pe.exit", worker=key[0], pe=key[1],
+                                      image=pe.image)
 
         # compact only the workers that lost a PE this tick
         if self._dirty_workers:
@@ -669,19 +716,28 @@ def simulate(
     config: Optional[SimConfig] = None,
     irm: Optional[IRM] = None,
     irm_config: Optional[IRMConfig] = None,
+    bus=None,
 ) -> SimResult:
     """Run the IRM against a workload stream; returns recorded time series.
 
     Passing an existing ``irm`` keeps its profiler state across runs — the
     paper's 10-run experiment where "HIO was started fresh for the first run
     and remained running for all subsequent runs".
+
+    ``bus``, when given, receives the observability event stream (message
+    spans, worker/PE lifecycle, IRM decision audit) with the same schema
+    as the live backends; events are stamped in nominal tick time.  The
+    frozen reference simulation has no such hook, and the equivalence
+    suite runs with ``bus=None``, so the bit-for-bit contract is intact.
     """
     cfg = config or SimConfig()
     if irm is None:
         irm = IRM(irm_config or IRMConfig())
     else:
         irm.begin_run()
-    cluster = SimCluster(cfg, irm)
+    cluster = SimCluster(cfg, irm, bus=bus)
+    if bus is not None:
+        irm.packing_manager.audit = bus.audit
 
     batches = sorted(stream.batches, key=lambda b: b[0])
     n_batches = len(batches)
@@ -713,6 +769,8 @@ def simulate(
     t = 0.0
     while t <= cfg.t_max:
         cluster.t = t
+        if bus is not None:
+            bus.tick = t
         arrivals: List[Message] = []
         while next_batch < n_batches and batches[next_batch][0] <= t:
             arrivals.extend(batches[next_batch][1])
@@ -723,7 +781,10 @@ def simulate(
         if t - last_report_t >= cfg.report_interval:
             cluster.flush_probes()
             last_report_t = t
-        irm.step(t, cluster)
+        step_metrics = irm.step(t, cluster)
+        if bus is not None:
+            emit_packing_audit(bus, irm.config.allocator.algorithm,
+                               step_metrics.packing)
 
         if n >= cap:  # t_max/dt bounds the tick count; guard regardless
             times = np.concatenate([times, np.empty(cap, np.float64)])

@@ -66,10 +66,15 @@ class Lifecycle:
         """
         if not 0 <= idx < len(self.pool.workers) or idx in self.failed:
             return 0
+        n_pes = len(self.pool.workers[idx].pes)
         harvested = self.pool.kill_worker(idx)
         self.failed.add(idx)
         for m in harvested:
             self.pool.master.requeue(m)
+        bus = self.pool.master.bus
+        if bus is not None:
+            bus.emit("worker.kill", worker=idx, pes=n_pes,
+                     requeued=len(harvested))
         return len(harvested)
 
     @loop_only

@@ -40,6 +40,7 @@ from ..core.queues import HostRequest
 from ..core.resources import Resources
 from ..core.sim import SimConfig, SimResult, WorkerState
 from ..core.workloads import Stream
+from ..obs.audit import emit_packing_audit
 from .clock import ScaledClock
 from .lifecycle import Lifecycle
 from .master import Master
@@ -210,10 +211,11 @@ async def _drive(
     irm: IRM,
     rt: RuntimeConfig,
     stats: Optional[Dict[str, object]],
+    bus=None,
 ) -> SimResult:
     clock = ScaledClock(rt.time_scale)
     total = stream.num_messages
-    master = Master(total_expected=total)
+    master = Master(total_expected=total, bus=bus)
     # construct the payload before starting the clock: JaxPayload warms the
     # jit cache at init, and that wall time must not burn virtual time
     payload = make_payload(rt.payload, **rt.payload_kwargs)
@@ -243,6 +245,11 @@ async def _drive(
     dims = tuple(cfg.resource_dims)
 
     clock.start()
+    if bus is not None:
+        # live event stamps read the real scaled clock; the nominal tick
+        # rides along in the envelope's ``tick`` field
+        bus.now = clock.now
+        irm.packing_manager.audit = bus.audit
     transport.connect()  # data-channel consumer needs the running loop
     feeder = asyncio.get_running_loop().create_task(
         _arrival_feed(stream, master, clock), name="arrival-feed"
@@ -262,6 +269,8 @@ async def _drive(
             # tick; the hook re-arms each tick until the victim slot
             # exists (the sim retries the same way for a late worker)
             lifecycle.nominal_t = t
+            if bus is not None:
+                bus.tick = t
             if fail_at is not None and t >= fail_at[1] \
                     and fail_at[0] < len(pool.workers):
                 lifecycle.kill_worker(fail_at[0])
@@ -287,8 +296,11 @@ async def _drive(
                             irm.ingest_report(report)
                 last_report_t = t
             w0 = time.perf_counter()
-            irm.step(t, cluster)
+            step_metrics = irm.step(t, cluster)
             step_wall_ms.append((time.perf_counter() - w0) * 1e3)
+            if bus is not None:
+                emit_packing_audit(bus, irm.config.allocator.algorithm,
+                                   step_metrics.packing)
             recorder.record(
                 t,
                 measured_cpu,
@@ -350,6 +362,7 @@ def run_live(
     irm_config: Optional[IRMConfig] = None,
     runtime: Optional[RuntimeConfig] = None,
     stats: Optional[Dict[str, object]] = None,
+    bus=None,
 ) -> SimResult:
     """Run the IRM against a workload stream on the live asyncio runtime.
 
@@ -366,4 +379,4 @@ def run_live(
     else:
         irm.begin_run()
     rt = runtime or RuntimeConfig()
-    return asyncio.run(_drive(stream, cfg, irm, rt, stats))
+    return asyncio.run(_drive(stream, cfg, irm, rt, stats, bus=bus))

@@ -34,7 +34,10 @@ __all__ = ["Master"]
 class Master:
     """In-process asyncio broker: the live runtime's stream master."""
 
-    def __init__(self, total_expected: int = 0):
+    def __init__(self, total_expected: int = 0, bus=None):
+        # optional observability event bus; everything that holds a master
+        # (pool, transports, lifecycle) reads it from here
+        self.bus = bus
         self._img_queues: Dict[str, Deque[Tuple[int, Message]]] = {}
         self._qlen = 0
         self._seq_back = 0
@@ -66,6 +69,9 @@ class Master:
         dq.append((self._seq_back, m))
         self._qlen += 1
         self._event(m.image).set()
+        if self.bus is not None:
+            self.bus.emit("msg.enqueued", msg_id=m.msg_id, image=m.image,
+                          arrival=m.arrival)
 
     def push_front(self, m: Message) -> None:
         """Head re-insert (failure requeue): ``list.insert(0, m)`` semantics."""
@@ -89,6 +95,8 @@ class Master:
         self.push_front(m)
         self.in_flight -= 1
         self.requeued += 1
+        if self.bus is not None:
+            self.bus.emit("msg.requeued", msg_id=m.msg_id, image=m.image)
 
     def close_arrivals(self) -> None:
         """No further pushes will come; enables drain detection."""

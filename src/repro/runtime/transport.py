@@ -156,6 +156,7 @@ class InProcTransport(Transport):
         cfg = pool.cfg
         clock = pool.clock
         master = pool.master
+        bus = master.bus
         try:
             await clock.sleep(cfg.pe_start_delay)
             pe.state = PEState.IDLE
@@ -169,18 +170,34 @@ class InProcTransport(Transport):
                     assert msg is head
                     pe.state = PEState.BUSY
                     pe.msg = msg
+                    if bus is not None:
+                        bus.emit("msg.pulled", msg_id=msg.msg_id,
+                                 image=msg.image, worker=worker.idx,
+                                 pe=pe.uid)
                     msg.start_t = clock.now()
+                    if bus is not None:
+                        bus.emit("msg.started", msg_id=msg.msg_id,
+                                 image=msg.image, worker=worker.idx,
+                                 pe=pe.uid)
                     await pool.payload(msg, clock)
                     msg.done_t = clock.now()
                     pe.msg = None
                     pe.state = PEState.IDLE
                     pe.idle_since = clock.now()
+                    if bus is not None:
+                        bus.emit("msg.completed", msg_id=msg.msg_id,
+                                 image=msg.image, worker=worker.idx,
+                                 pe=pe.uid, start_t=msg.start_t,
+                                 done_t=msg.done_t, arrival=msg.arrival)
                     master.complete(msg)
                     continue
                 remaining = cfg.container_idle_timeout - (
                     clock.now() - pe.idle_since
                 )
                 if remaining <= 0:
+                    if bus is not None:
+                        bus.emit("pe.exit", worker=worker.idx, pe=pe.uid,
+                                 image=pe.image)
                     break  # graceful self-termination
                 if head is not None:
                     # vector-gated head: poll (head-blocking FIFO — the
@@ -249,6 +266,7 @@ _EV_PULL = 1       # (tag, pe_uid, image, decode_ms)
 _EV_COMPLETE = 2   # (tag, pe_uid, blob, start_t, done_t, cpu_s, encode_ms,
 #                     proc_cpu_s)
 _EV_PE_EXIT = 3    # (tag, pe_uid) — idle-timeout self-termination
+_EV_METRICS = 4    # (tag, pe_uid, registry_delta) — mergeable metrics flush
 
 # control-channel command tags (master → worker)
 _CMD_START_PE = 0  # (tag, pe_uid, image)
@@ -272,6 +290,7 @@ def _mp_worker_main(
     idle_timeout: float,
     poll_interval: float,
     payload_spec: Tuple[str, dict],
+    obs_enabled: bool = False,
 ) -> None:
     """Entry point of one worker process.
 
@@ -293,6 +312,16 @@ def _mp_worker_main(
         return (time.monotonic() - mono0) / time_scale
 
     def _pe_thread(uid: int, image: str) -> None:
+        # Per-thread metrics registry: deltas are flushed over the data
+        # channel *before* the completion they describe, so FIFO ordering
+        # guarantees the master's merged counters equal the applied
+        # completions exactly at a clean drain, and overshoot by at most
+        # the killed worker's unflushed in-flight messages under SIGKILL.
+        reg = None
+        if obs_enabled:
+            from ..obs.metrics import MetricsRegistry
+
+            reg = MetricsRegistry()
         time.sleep(pe_start_delay * time_scale)
         data_q.put((_EV_READY, uid))
         idle_since = now()
@@ -322,6 +351,12 @@ def _mp_worker_main(
             w0 = time.perf_counter()
             out = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
             encode_ms = (time.perf_counter() - w0) * 1e3 + decode_ms
+            if reg is not None:
+                reg.counter("worker.msgs_completed").inc()
+                reg.counter("worker.payload_cpu_s").inc(cpu_s)
+                reg.histogram("worker.service_s").observe(done_t - start_t)
+                # flush BEFORE the completion (see the registry note above)
+                data_q.put((_EV_METRICS, uid, reg.delta()))
             data_q.put((
                 _EV_COMPLETE, uid, out, start_t, done_t, cpu_s, encode_ms,
                 _proc_cpu_seconds() - cpu0,
@@ -445,6 +480,7 @@ class MultiprocTransport(Transport):
                 worker.idx, cmd_q, data_q, time_scale, mono0,
                 cfg.pe_start_delay, cfg.container_idle_timeout,
                 pool.poll_interval, self._payload_spec,
+                pool.master.bus is not None,
             ),
             name=f"irm-worker-{worker.idx}",
             daemon=True,
@@ -495,6 +531,13 @@ class MultiprocTransport(Transport):
     def _handle_event(self, widx: int, h: _ProcHandle, ev: tuple) -> None:
         pool = self.pool
         tag = ev[0]
+        if tag == _EV_METRICS:
+            # metric deltas outlive their PE mirror (a flush can land after
+            # the PE's exit event): merge unconditionally, never drop
+            bus = pool.master.bus
+            if bus is not None:
+                bus.registry.merge(ev[2])
+            return
         pe = h.pes.get(ev[1])
         if pe is None:
             return  # PE exited or worker was killed while the event flew
@@ -508,6 +551,9 @@ class MultiprocTransport(Transport):
         elif tag == _EV_PE_EXIT:
             h.pes.pop(pe.uid, None)
             pe.state = PEState.STOPPED
+            bus = pool.master.bus
+            if bus is not None:
+                bus.emit("pe.exit", worker=widx, pe=pe.uid, image=pe.image)
             worker = pool.workers[widx]
             try:
                 worker.pes.remove(pe)
@@ -537,6 +583,12 @@ class MultiprocTransport(Transport):
         assert msg is head
         pe.state = PEState.BUSY
         pe.msg = msg
+        bus = master.bus
+        if bus is not None:
+            bus.emit("msg.pulled", msg_id=msg.msg_id, image=msg.image,
+                     worker=widx, pe=pe.uid)
+            bus.emit("msg.started", msg_id=msg.msg_id, image=msg.image,
+                     worker=widx, pe=pe.uid)
         msg.start_t = pool.clock.now()  # refined by the worker's own stamp
         w0 = time.perf_counter()
         blob = self.serialize(msg)
@@ -573,6 +625,11 @@ class MultiprocTransport(Transport):
         pe.msg = None
         pe.state = PEState.IDLE
         pe.idle_since = pool.clock.now()
+        bus = pool.master.bus
+        if bus is not None:
+            bus.emit("msg.completed", msg_id=msg.msg_id, image=msg.image,
+                     worker=widx, pe=pe.uid, start_t=msg.start_t,
+                     done_t=msg.done_t, arrival=msg.arrival)
         pool.master.complete(msg)
 
     @loop_only
@@ -650,7 +707,9 @@ class MultiprocTransport(Transport):
                     pe = h.pes.get(ev[1])
                     if pe is not None:
                         self._on_complete(worker.idx, h, pe, ev)
-                elif ev[0] == _EV_PE_EXIT:
+                elif ev[0] in (_EV_PE_EXIT, _EV_METRICS):
+                    # flushed metric deltas are applied like flushed
+                    # completions: they describe work that really happened
                     self._handle_event(worker.idx, h, ev)
                 # pending pulls/readies die with the worker
             h.cmd_q.cancel_join_thread()

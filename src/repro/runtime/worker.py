@@ -143,10 +143,13 @@ class WorkerPool:
         if not self._booting:
             return
         due = [idx for idx, rt in self._booting.items() if t >= rt]
+        bus = self.master.bus
         for idx in due:
             del self._booting[idx]
             self.workers[idx].state = WorkerState.ACTIVE
             insort(self._active_idx, idx)
+            if bus is not None:
+                bus.emit("worker.active", worker=idx)
 
     def n_alive(self) -> int:
         return self._n_alive
@@ -175,6 +178,9 @@ class WorkerPool:
             self._booting[w.idx] = w.ready_t
         else:  # zero boot delay: born ACTIVE
             insort(self._active_idx, w.idx)
+        if self.master.bus is not None:
+            self.master.bus.emit("worker.boot", worker=w.idx,
+                                 ready_t=w.ready_t)
         # provision the backing resource now so it overlaps the boot delay
         # (a process transport forks here; in-process this is a no-op)
         self.transport.start_worker(w)
@@ -205,6 +211,9 @@ class WorkerPool:
         w.ready_t = ready_t
         self._booting[w.idx] = ready_t
         self._n_alive += 1
+        if self.master.bus is not None:
+            self.master.bus.emit("worker.boot", worker=w.idx,
+                                 ready_t=ready_t)
         self.transport.start_worker(w)
 
     @loop_only
@@ -214,6 +223,8 @@ class WorkerPool:
         self._active_idx.remove(w.idx)
         heapq.heappush(self._off_heap, w.idx)
         self._n_alive -= 1
+        if self.master.bus is not None:
+            self.master.bus.emit("worker.deactivate", worker=w.idx)
         self.transport.stop_worker(w)
 
     @loop_only
@@ -262,6 +273,9 @@ class WorkerPool:
         pe = LivePE(req.image, req.size_estimate, uid=self._pe_uid)
         w.pes.append(pe)
         self._pe_total += 1
+        if self.master.bus is not None:
+            self.master.bus.emit("pe.spawn", worker=idx, pe=pe.uid,
+                                 image=req.image)
         self.transport.spawn_pe(w, pe)
         return True
 

@@ -29,6 +29,7 @@ import numpy as np
 from ..core.binpack import make_packer
 from ..core.irm import IRM
 from ..core.sim import SimResult, simulate
+from ..obs import EventBus, ObsConfig, finalize_run
 from .registry import Scenario, get_scenario
 
 __all__ = ["ScenarioResult", "run_scenario", "sweep_policies",
@@ -73,6 +74,9 @@ class ScenarioResult:
     summary: Dict[str, float]
     expectations: Dict[str, bool]
     backend: str = "sim"
+    # the observability bus of the *final* run (``run_scenario(obs=...)``);
+    # ``None`` when observability was off
+    obs: Optional[EventBus] = None
 
     @property
     def final(self) -> SimResult:
@@ -139,6 +143,7 @@ def run_scenario(
     runtime: Optional[object] = None,
     sim_overrides: Optional[Dict[str, object]] = None,
     engine: Optional[str] = None,
+    obs: Optional[ObsConfig] = None,
 ) -> ScenarioResult:
     """Run a scenario end to end and evaluate its expectations.
 
@@ -163,6 +168,12 @@ def run_scenario(
     promoted to an OS process — ``runtime.transport`` is forced to
     ``"multiproc"`` on the runtime config).  The same IRM code schedules
     all three.
+
+    ``obs`` (an :class:`repro.obs.ObsConfig`) enables the observability
+    plane: each run records into a fresh :class:`repro.obs.EventBus` with
+    an identical schema across all three backends; the *final* run's bus
+    is finalized (metrics folded, transport stats merged, exported to
+    ``obs.out`` when set) and returned on ``ScenarioResult.obs``.
     """
     if backend not in ("sim", "live", "multiproc"):
         raise ValueError(
@@ -222,14 +233,26 @@ def run_scenario(
     makespans: List[float] = []
     n = n_runs if n_runs is not None else scn.n_runs
     overrides = stream_overrides or {}
+    bus: Optional[EventBus] = None
+    live_stats: Optional[Dict[str, object]] = None
     for i in range(n):
         stream = scn.make_stream(base_seed + i, **overrides)
+        if obs is not None:
+            bus = EventBus(level=obs.level)  # fresh bus per run
         if backend in ("live", "multiproc"):
-            res = run_live(stream, sim_cfg, irm=irm, runtime=rt)
+            live_stats = {} if obs is not None else None
+            res = run_live(stream, sim_cfg, irm=irm, runtime=rt,
+                           stats=live_stats, bus=bus)
         else:
-            res = simulate(stream, sim_cfg, irm=irm)
+            res = simulate(stream, sim_cfg, irm=irm, bus=bus)
         runs.append(res)
         makespans.append(float(res.makespan))
+    if bus is not None:
+        tstats = live_stats.get("transport") if live_stats else None
+        finalize_run(bus, out=obs.out, transport_stats=tstats,
+                     extra={"scenario": scn.name,
+                            "policy": policy or irm_cfg.allocator.algorithm,
+                            "backend": backend})
 
     summary = summarize_result(runs[-1], sim_cfg.dt)
     summary["makespans_s"] = makespans
@@ -246,6 +269,7 @@ def run_scenario(
         summary=summary,
         expectations=expectations,
         backend=backend,
+        obs=bus,
     )
 
 

@@ -182,6 +182,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="seconds-long run via the scenario's smoke overrides")
     ap.add_argument("--out", default=None,
                     help="directory for per-tick CSV + summary JSON")
+    ap.add_argument("--obs-out", default=None, metavar="DIR",
+                    help="enable the observability plane and export the "
+                    "event log (events.jsonl), Prometheus text "
+                    "(metrics.prom) and run summary (summary.json) to DIR; "
+                    "single-policy runs only")
+    ap.add_argument("--obs-level", choices=("lifecycle", "full"),
+                    default="full",
+                    help="with --obs-out: 'lifecycle' skips IRM "
+                    "decision-audit events (irm.pack); 'full' records "
+                    "everything")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero if any expectation fails")
     args = ap.parse_args(argv)
@@ -211,6 +221,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         for flag, value in (("--policy", args.policy), ("--runs", args.runs),
                             ("--fail-worker", args.fail_worker),
                             ("--engine", args.engine),
+                            ("--obs-out", args.obs_out),
                             ("--check", args.check or None)):
             if value is not None:
                 print(f"note: {flag} does not apply to the serving backend "
@@ -268,6 +279,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                       stream_overrides=stream_overrides, t_max=t_max,
                       backend=args.backend, sim_overrides=sim_overrides,
                       engine=args.engine)
+    if args.obs_out is not None:
+        if len(policies) > 1:
+            print("error: --obs-out requires a single policy (the event "
+                  "log is per-run)", file=sys.stderr)
+            return 2
+        from ..obs import ObsConfig
+
+        run_kwargs["obs"] = ObsConfig(out=args.obs_out, level=args.obs_level)
     if args.backend in ("live", "multiproc"):
         from ..runtime.live import RuntimeConfig
 

@@ -253,6 +253,82 @@ def test_r5_fires_on_unseeded_rng_and_set_iteration(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R6 — event-schema manifest
+# ---------------------------------------------------------------------------
+
+_R6_MANIFEST = (
+    '{"schema_test": "tests/test_obs.py",\n'
+    ' "events": {"msg.enqueued": ["msg_id", "image", "arrival"]}}\n'
+)
+_R6_TEST = 'def test_schema():\n    assert "msg.enqueued"\n'
+
+
+@pytest.mark.timeout(30)
+def test_r6_fires_on_unregistered_event_type(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _R6_MANIFEST,
+        "tests/test_obs.py": _R6_TEST,
+        "src/repro/runtime/mod.py": (
+            "def go(bus, m):\n"
+            '    bus.emit("msg.enqueued", msg_id=m.msg_id, image=m.image,\n'
+            "             arrival=m.arrival)\n"
+            '    bus.emit("msg.mystery", msg_id=m.msg_id)\n'
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R6"]), "R6")
+    assert any(
+        "'msg.mystery'" in m and "event_manifest.json" in m for m in msgs
+    )
+
+
+@pytest.mark.timeout(30)
+def test_r6_fires_on_payload_field_drift(tmp_path):
+    """Both directions: an emitted field the manifest lacks, and a
+    manifest field the emit site dropped."""
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _R6_MANIFEST,
+        "tests/test_obs.py": _R6_TEST,
+        "src/repro/runtime/mod.py": (
+            "def go(bus, m):\n"
+            '    bus.emit("msg.enqueued", msg_id=m.msg_id, image=m.image,\n'
+            "             priority=3)\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R6"]), "R6")
+    assert any("'priority'" in m and "drift" in m for m in msgs)
+    assert any("'arrival'" in m and "full pinned field set" in m for m in msgs)
+
+
+@pytest.mark.timeout(30)
+def test_r6_fires_on_stale_entry_and_unexercised_type(tmp_path):
+    # nothing emits msg.enqueued, and the schema test never names it
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _R6_MANIFEST,
+        "tests/test_obs.py": "def test_nothing():\n    pass\n",
+        "src/repro/runtime/mod.py": "def go(bus):\n    pass\n",
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R6"]), "R6")
+    assert any("stale event manifest" in m for m in msgs)
+    assert any("never exercised by the schema test" in m for m in msgs)
+
+
+@pytest.mark.timeout(30)
+def test_r6_fires_on_non_literal_event_type(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _R6_MANIFEST,
+        "tests/test_obs.py": _R6_TEST,
+        "src/repro/runtime/mod.py": (
+            "def go(bus, m, ev):\n"
+            '    bus.emit("msg.enqueued", msg_id=m.msg_id, image=m.image,\n'
+            "             arrival=m.arrival)\n"
+            "    bus.emit(ev, msg_id=m.msg_id)\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R6"]), "R6")
+    assert any("non-literal event type" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
 # Infrastructure: parse findings, baseline semantics, annotations, CLI
 # ---------------------------------------------------------------------------
 

@@ -26,8 +26,14 @@ livelock → utilization collapses to ~half; arrival race → worker target
 overshoots by 2x) while staying robust to honest scheduling jitter.
 """
 
+import os
+import tempfile
+
 import pytest
 
+from repro.obs import ObsConfig
+from repro.obs.analyze import drift_report, render_drift
+from repro.obs.exporters import write_jsonl
 from repro.runtime import RuntimeConfig
 from repro.scenarios.engine import run_scenario
 from repro.scenarios.registry import get_scenario
@@ -51,12 +57,31 @@ def _pair(name: str, policy: str, seed: int = 0, sim_overrides=None,
         stream_overrides=scn.smoke_overrides,
         t_max=scn.smoke_t_max,
         sim_overrides=sim_overrides,
+        obs=ObsConfig(),
     )
     sim = run_scenario(name, backend="sim", **kwargs)
     runtime = FAST if live_backend == "live" else FAST_MP
     live = run_scenario(name, backend=live_backend, runtime=runtime,
                         **kwargs)
     return sim, live
+
+
+def _dump_events_on_failure(sim, live) -> str:
+    """A band failure on its own says *that* the backends diverged, not
+    where.  Dump both runs' event logs next to the failure and fold the
+    analyzer's drift report into the assertion message, so the first
+    CI failure already shows which lifecycle stage (queue-wait, handoff,
+    service) or event count moved."""
+    if sim.obs is None or live.obs is None:
+        return ""
+    d = tempfile.mkdtemp(prefix="parity-events-")
+    write_jsonl(os.path.join(d, "sim-events.jsonl"), sim.obs.events)
+    write_jsonl(os.path.join(d, "live-events.jsonl"), live.obs.events)
+    report = drift_report(sim.obs.events, live.obs.events)
+    return (
+        f"\n\nevent logs dumped to {d} (a=sim-events.jsonl, "
+        f"b=live-events.jsonl)\n" + render_drift(report)
+    )
 
 
 def _assert_same_resource_mix(sim, live, *, abs_tol: float = 0.1):
@@ -74,30 +99,41 @@ def _assert_same_resource_mix(sim, live, *, abs_tol: float = 0.1):
     live_tot = live.final.scheduled_res.sum(axis=(0, 1))
     sim_share = sim_tot / sim_tot.sum()
     live_share = live_tot / live_tot.sum()
-    assert live_share == pytest.approx(sim_share, abs=abs_tol), (
-        f"scheduled-resource mix diverged: dims {sim.final.resource_dims} "
-        f"sim {sim_share} vs live {live_share}"
-    )
+    try:
+        assert live_share == pytest.approx(sim_share, abs=abs_tol), (
+            f"scheduled-resource mix diverged: dims "
+            f"{sim.final.resource_dims} sim {sim_share} vs live {live_share}"
+        )
+    except AssertionError as exc:
+        raise AssertionError(
+            str(exc) + _dump_events_on_failure(sim, live)
+        ) from None
 
 
 def _assert_parity(sim, live, *, util_tol: float, target_tol: int,
                    makespan_ratio: float):
     s, l = sim.summary, live.summary
-    # both backends process (nearly) the whole stream
-    assert l["completed"] >= 0.9 * l["total"]
-    assert s["completed"] >= 0.9 * s["total"]
-    # utilization of scheduled-active worker cells
-    assert l["mean_scheduled_utilization_active"] == pytest.approx(
-        s["mean_scheduled_utilization_active"], abs=util_tol
-    )
-    # worker-target trajectory endpoints
-    assert abs(l["max_target_workers"] - s["max_target_workers"]) <= target_tol
-    lf = int(live.final.target_workers[-1])
-    sf = int(sim.final.target_workers[-1])
-    assert abs(lf - sf) <= target_tol
-    # end-to-end drain time within a band of the sim's
-    assert l["makespan_s"] <= makespan_ratio * s["makespan_s"]
-    assert l["makespan_s"] >= s["makespan_s"] / makespan_ratio
+    try:
+        # both backends process (nearly) the whole stream
+        assert l["completed"] >= 0.9 * l["total"]
+        assert s["completed"] >= 0.9 * s["total"]
+        # utilization of scheduled-active worker cells
+        assert l["mean_scheduled_utilization_active"] == pytest.approx(
+            s["mean_scheduled_utilization_active"], abs=util_tol
+        )
+        # worker-target trajectory endpoints
+        assert abs(l["max_target_workers"]
+                   - s["max_target_workers"]) <= target_tol
+        lf = int(live.final.target_workers[-1])
+        sf = int(sim.final.target_workers[-1])
+        assert abs(lf - sf) <= target_tol
+        # end-to-end drain time within a band of the sim's
+        assert l["makespan_s"] <= makespan_ratio * s["makespan_s"]
+        assert l["makespan_s"] >= s["makespan_s"] / makespan_ratio
+    except AssertionError as exc:
+        raise AssertionError(
+            str(exc) + _dump_events_on_failure(sim, live)
+        ) from None
 
 
 @pytest.mark.timeout(180)
@@ -176,6 +212,7 @@ def test_fault_parity_worker_kill_mid_run():
         policy="first-fit", base_seed=0, n_runs=1,
         stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
         sim_overrides={"fail_worker_at": (0, 20.5)},
+        obs=ObsConfig(),
     )
     sim = run_scenario("microscopy", backend="sim", **kwargs)
     live = run_scenario("microscopy", backend="live",
@@ -238,6 +275,7 @@ def test_multiproc_fault_parity_worker_kill_mid_run():
         policy="first-fit", base_seed=0, n_runs=1,
         stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
         sim_overrides={"fail_worker_at": (0, 20.5)},
+        obs=ObsConfig(),
     )
     sim = run_scenario("microscopy", backend="sim", **kwargs)
     live = run_scenario("microscopy", backend="multiproc",

@@ -1,0 +1,485 @@
+"""The observability plane: schema pin, metric merge, analyzer, exporters.
+
+This file is the runtime half of the R6 pin (``repro-analyze`` checks the
+``bus.emit`` call sites statically; here the three backends actually run
+and must produce byte-identical payload schemas).  It also pins the two
+properties that make the metrics plane trustworthy:
+
+- **clean drain** — after a multiproc run completes, the worker-side
+  counters merged over the data queue equal the master's completion count
+  exactly (the flush rides the queue *before* each completion, FIFO);
+- **SIGKILL bounds** — killing a worker process mid-run may lose the
+  killed worker's unflushed delta and may double-count a message whose
+  metrics flush outran its completion event, but never by more than the
+  in-flight PEs at the kill: ``completed <= merged <= completed + pes``.
+
+The analyzer tests close the loop the issue asks for: latency
+decomposition sums reproduce each message's recorded e2e latency, and the
+p50/p95/p99 computed from the event log alone equal the ones
+``benchmarks/runtime_throughput.py`` computes from the run's in-memory
+``Message`` list.
+"""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.obs import EventBus, ObsConfig
+from repro.obs.analyze import (
+    audit_report,
+    critical_path,
+    drift_report,
+    e2e_percentiles,
+    fold_events,
+    latency_decomposition,
+    load_manifest,
+    render_drift,
+    schema_of,
+    summarize,
+    validate_events,
+)
+from repro.obs.audit import explain_rejections
+from repro.obs.exporters import (
+    load_events,
+    prometheus_text,
+    run_summary,
+    write_jsonl,
+)
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime import RuntimeConfig
+from repro.scenarios.engine import run_scenario
+from repro.scenarios.registry import get_scenario
+
+#: Every event type the manifest pins — listed literally so both this
+#: test and the R6 "exercised" check can see each one.
+EXPECTED_TYPES = (
+    "msg.enqueued",
+    "msg.pulled",
+    "msg.started",
+    "msg.completed",
+    "msg.requeued",
+    "worker.boot",
+    "worker.active",
+    "worker.deactivate",
+    "worker.kill",
+    "pe.spawn",
+    "pe.exit",
+    "irm.pack",
+)
+
+
+def _run(backend, *, sim_overrides=None, time_scale=0.01, level="full"):
+    scn = get_scenario("microscopy")
+    kwargs = dict(
+        policy="first-fit", base_seed=0, n_runs=1,
+        stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
+        sim_overrides=sim_overrides, obs=ObsConfig(level=level),
+    )
+    if backend != "sim":
+        kwargs["runtime"] = RuntimeConfig(time_scale=time_scale)
+    return run_scenario("microscopy", backend=backend, **kwargs)
+
+
+@pytest.fixture(scope="module")
+def sim_result():
+    return _run("sim")
+
+
+@pytest.fixture(scope="module")
+def live_result():
+    return _run("live")
+
+
+@pytest.fixture(scope="module")
+def mp_result():
+    return _run("multiproc", time_scale=0.02)
+
+
+@pytest.fixture(scope="module")
+def sim_fault():
+    return _run("sim", sim_overrides={"fail_worker_at": (0, 20.5)})
+
+
+@pytest.fixture(scope="module")
+def mp_fault():
+    return _run("multiproc", time_scale=0.05,
+                sim_overrides={"fail_worker_at": (0, 20.5)})
+
+
+# ---------------------------------------------------------------------------
+# Metric instruments
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2.5)
+    reg.gauge("g").set(7.0)
+    reg.gauge("g").set(3.0)
+    h = reg.histogram("h", bounds=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(99.0)
+    snap = reg.snapshot()
+    assert snap["c"] == {"type": "counter", "value": 3.5}
+    assert snap["g"] == {"type": "gauge", "value": 3.0}
+    assert snap["h"]["counts"] == [1, 1, 1]
+    assert snap["h"]["count"] == 3
+    assert snap["h"]["sum"] == pytest.approx(104.5)
+    with pytest.raises(TypeError):
+        reg.gauge("c")
+
+
+def test_delta_merge_equals_snapshot():
+    """N worker registries flushed as deltas into a master registry give
+    the same totals as observing everything in one registry."""
+    master = MetricsRegistry()
+    reference = MetricsRegistry()
+    for w in range(3):
+        worker = MetricsRegistry()
+        for i in range(4):
+            v = w + i * 0.5
+            worker.counter("done").inc()
+            worker.histogram("svc").observe(v)
+            reference.counter("done").inc()
+            reference.histogram("svc").observe(v)
+            if i == 1:  # mid-run flush: deltas, not totals, must ship
+                master.merge(worker.delta())
+        master.merge(worker.delta())
+        assert worker.delta() == {}  # drained: nothing left to ship
+    assert master.snapshot() == reference.snapshot()
+
+
+def test_histogram_merge_rejects_mismatched_bounds():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h", bounds=(1.0, 2.0)).observe(1.5)
+    b.histogram("h", bounds=(1.0, 3.0)).observe(1.5)
+    with pytest.raises(ValueError, match="bounds mismatch"):
+        a.merge(b.delta())
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend schema equality (the runtime half of R6)
+# ---------------------------------------------------------------------------
+
+
+def test_schema_identical_across_backends(sim_result, live_result, mp_result):
+    """All three backends emit byte-identical payload schemas on the
+    shared scenario, and every observed type conforms to the manifest."""
+    schemas = {}
+    for name, res in (("sim", sim_result), ("live", live_result),
+                      ("multiproc", mp_result)):
+        assert res.obs is not None
+        assert validate_events(res.obs.events) == []
+        schemas[name] = schema_of(res.obs.events)
+    common = set(schemas["sim"]) & set(schemas["live"]) & set(schemas["multiproc"])
+    # the happy path must produce the full lifecycle on every backend
+    assert {"msg.enqueued", "msg.pulled", "msg.started", "msg.completed",
+            "worker.boot", "worker.active", "pe.spawn", "pe.exit",
+            "irm.pack"} <= common
+    for ev in common:
+        pinned = json.dumps(schemas["sim"][ev], sort_keys=True)
+        assert json.dumps(schemas["live"][ev], sort_keys=True) == pinned
+        assert json.dumps(schemas["multiproc"][ev], sort_keys=True) == pinned
+
+
+def test_fault_runs_cover_the_remaining_types(sim_fault, mp_fault):
+    """worker.kill / msg.requeued only appear under faults; with those
+    runs included, the union of observed types is the entire manifest."""
+    assert validate_events(sim_fault.obs.events) == []
+    assert validate_events(mp_fault.obs.events) == []
+    observed = set()
+    for res in (sim_fault, mp_fault):
+        observed |= {e["ev"] for e in res.obs.events}
+    assert {"worker.kill", "msg.requeued", "worker.deactivate"} <= observed
+
+
+def test_manifest_matches_expected_types(sim_result, sim_fault):
+    man = load_manifest()["events"]
+    assert set(man) == set(EXPECTED_TYPES)
+    observed = {e["ev"] for e in sim_result.obs.events}
+    observed |= {e["ev"] for e in sim_fault.obs.events}
+    assert observed == set(EXPECTED_TYPES)
+
+
+def test_vector_policy_audit_capture():
+    """The vector allocator path captures its audit too (multi-dim free
+    vectors, per-dimension rejection reasons)."""
+    scn = get_scenario("microscopy-mem")
+    res = run_scenario(
+        "microscopy-mem", policy="vector-first-fit", base_seed=0, n_runs=1,
+        stream_overrides=scn.smoke_overrides, t_max=scn.smoke_t_max,
+        obs=ObsConfig(),
+    )
+    assert validate_events(res.obs.events) == []
+    packs = [e for e in res.obs.events
+             if e["ev"] == "irm.pack" and e["placements"]]
+    assert packs
+    # multi-dimensional sizes ride the audit
+    assert any(len(pl["size"]) == 2
+               for p in packs for pl in p["placements"])
+
+
+def test_lifecycle_level_drops_the_decision_audit():
+    res = _run("sim", level="lifecycle")
+    assert all(e["ev"] != "irm.pack" for e in res.obs.events)
+    # lifecycle events still flow
+    assert any(e["ev"] == "msg.completed" for e in res.obs.events)
+
+
+# ---------------------------------------------------------------------------
+# Metric merge over the process boundary
+# ---------------------------------------------------------------------------
+
+
+def test_multiproc_clean_drain_merges_exactly(mp_result):
+    """Every worker-side delta rides the data queue before its completion
+    event, so at clean drain the merged counter equals the master's
+    completion count exactly — no loss, no double-count."""
+    reg = mp_result.obs.registry.snapshot()
+    completed = mp_result.summary["completed"]
+    assert reg["worker.msgs_completed"]["value"] == completed
+    assert reg["worker.service_s"]["count"] == completed
+    assert reg["worker.payload_cpu_s"]["value"] > 0.0
+
+
+def test_multiproc_sigkill_merge_bounds(mp_fault):
+    """A SIGKILL mid-run loses at most the killed worker's unflushed
+    delta and double-counts at most the in-flight PEs whose metric flush
+    outran the completion event it preceded."""
+    completed = mp_fault.summary["completed"]
+    assert completed == mp_fault.summary["total"]  # at-least-once held
+    kills = [e for e in mp_fault.obs.events if e["ev"] == "worker.kill"]
+    assert len(kills) == 1
+    pes_at_kill = kills[0]["pes"]
+    merged = mp_fault.obs.registry.snapshot()["worker.msgs_completed"]["value"]
+    assert completed <= merged <= completed + pes_at_kill
+
+
+def test_transport_stats_surface_as_run_summary_metrics(mp_result):
+    """``Transport.stats()`` counters are first-class metrics now —
+    profiler drift and serialization cost no longer die inside the
+    transport object."""
+    reg = mp_result.obs.registry.snapshot()
+    for key in ("transport.profiler_drift_pp", "transport.ser_bytes_per_msg",
+                "transport.ser_ms_per_msg", "transport.data_msgs_in",
+                "transport.workers_spawned"):
+        assert key in reg, f"missing {key}"
+        assert reg[key]["type"] == "gauge"
+    summary = run_summary(mp_result.obs.registry)
+    assert summary["metrics"]["transport.profiler_drift_pp"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Analyzer: latency decomposition, percentiles, traces
+# ---------------------------------------------------------------------------
+
+
+def _decomposition_matches_recorded_e2e(res):
+    events = res.obs.events
+    enq = {e["msg_id"]: e for e in events if e["ev"] == "msg.enqueued"}
+    dec = latency_decomposition(events)
+    assert dec["totals"]["count"] == res.summary["completed"]
+    for row in dec["per_message"]:
+        total = row["queue_wait"] + row["handoff"] + row["service"]
+        assert row["e2e"] == pytest.approx(total, abs=1e-9)
+        done = [e for e in events
+                if e["ev"] == "msg.completed" and e["msg_id"] == row["msg_id"]]
+        recorded = done[-1]["done_t"] - enq[row["msg_id"]]["t"]
+        assert row["e2e"] == pytest.approx(recorded, abs=1e-6)
+
+
+def test_latency_decomposition_sums_to_recorded_e2e(sim_result, live_result):
+    _decomposition_matches_recorded_e2e(sim_result)
+    _decomposition_matches_recorded_e2e(live_result)
+
+
+def test_decomposition_charges_requeues_to_queue_wait(sim_fault):
+    dec = latency_decomposition(sim_fault.obs.events)
+    reexecuted = [r for r in dec["per_message"] if r["attempts"] > 1]
+    assert reexecuted, "fault run should re-execute at least one message"
+    for row in reexecuted:
+        assert row["service"] >= 0.0
+        assert row["handoff"] >= -1e-9
+
+
+def test_analyzer_percentiles_match_bench_pipeline(live_result):
+    """p50/p95/p99 from the event log alone == the BENCH_runtime.json
+    pipeline's numbers from the run's in-memory Message list."""
+    done = [m for m in live_result.final.messages if m.done_t >= 0]
+    lat = np.array([m.done_t - m.arrival for m in done])
+    expected = {p: float(np.percentile(lat, p)) for p in (50, 95, 99)}
+    pct = e2e_percentiles(live_result.obs.events)
+    assert pct["count"] == len(done)
+    assert pct["p50"] == pytest.approx(expected[50], rel=1e-12)
+    assert pct["p95"] == pytest.approx(expected[95], rel=1e-12)
+    assert pct["p99"] == pytest.approx(expected[99], rel=1e-12)
+
+
+def test_critical_path_orders_one_message(sim_result):
+    # msg_id is a process-wide auto-increment: derive a real id from the
+    # log rather than assuming the stream starts at 0
+    first = min(e["msg_id"] for e in sim_result.obs.events
+                if e["ev"] == "msg.enqueued")
+    path = critical_path(sim_result.obs.events, first)
+    assert [h["ev"] for h in path][:2] == ["msg.enqueued", "msg.pulled"]
+    assert path[-1]["ev"] == "msg.completed"
+    assert all(h["dt"] >= 0.0 for h in path[1:])
+
+
+def test_fold_events_derives_master_metrics(sim_result):
+    reg = MetricsRegistry()
+    fold_events(reg, sim_result.obs.events)
+    snap = reg.snapshot()
+    n = sim_result.summary["completed"]
+    assert snap["events.msg.completed"]["value"] == n
+    assert snap["latency.e2e_s"]["count"] == n
+    assert snap["latency.service_s"]["count"] == n
+
+
+# ---------------------------------------------------------------------------
+# Decision audit
+# ---------------------------------------------------------------------------
+
+
+def test_explain_rejections_first_fit_skips_full_bins():
+    rej = explain_rejections(
+        "first-fit", capacity=[1.0],
+        free_before=[[0.2], [0.9]], sizes=[[0.5]], assignments=[1],
+    )
+    assert len(rej) == 1 and len(rej[0]) == 1
+    assert rej[0][0]["bin"] == 0
+    assert "insufficient cpu" in rej[0][0]["reason"] or \
+        "insufficient dim0" in rej[0][0]["reason"]
+
+
+def test_explain_rejections_best_fit_names_looser_bins():
+    rej = explain_rejections(
+        "best-fit", capacity=[1.0],
+        free_before=[[0.9], [0.6]], sizes=[[0.5]], assignments=[1],
+        dims=("cpu",),
+    )
+    assert rej[0][0]["bin"] == 0
+    assert "looser residual" in rej[0][0]["reason"]
+
+
+def test_irm_pack_events_carry_consistent_audit(sim_result):
+    packs = [e for e in sim_result.obs.events if e["ev"] == "irm.pack"]
+    assert packs
+    with_placements = [p for p in packs if p["placements"]]
+    assert with_placements, "full level should capture placements"
+    for p in with_placements:
+        for pl in p["placements"]:
+            assert pl["bin"] >= 0
+            for rej in pl["rejections"]:
+                assert rej["bin"] != pl["bin"]
+    report = audit_report(sim_result.obs.events, run=0)
+    assert "packing run 0" in report and "policy=first-fit" in report
+
+
+# ---------------------------------------------------------------------------
+# Drift report
+# ---------------------------------------------------------------------------
+
+
+def test_drift_report_flags_schema_and_count_divergence(sim_result):
+    events = sim_result.obs.events
+    clean = drift_report(events, events)
+    assert clean["schema"] == {"only_in_a": [], "only_in_b": [],
+                               "field_diffs": {}}
+    assert all(c["a"] == c["b"] for c in clean["counts"].values())
+    mutated = [dict(e) for e in events if e["ev"] != "pe.exit"]
+    for e in mutated:
+        if e["ev"] == "msg.completed":
+            e["extra_field"] = 1
+    rep = drift_report(events, mutated)
+    assert "pe.exit" in rep["schema"]["only_in_a"]
+    assert "msg.completed" in rep["schema"]["field_diffs"]
+    text = render_drift(rep)
+    assert "differs" in text and "e2e" in text
+
+
+# ---------------------------------------------------------------------------
+# Exporters + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_roundtrip_and_prometheus_text(tmp_path, sim_result):
+    path = tmp_path / "events.jsonl"
+    write_jsonl(path, sim_result.obs.events)
+    assert load_events(path) == sim_result.obs.events
+    reg = MetricsRegistry()
+    fold_events(reg, sim_result.obs.events)
+    text = prometheus_text(reg)
+    assert "# TYPE events_msg_completed counter" in text
+    assert '# TYPE latency_e2e_s histogram' in text
+    assert 'latency_e2e_s_bucket{le="+Inf"}' in text
+    # +Inf bucket is cumulative over everything
+    n = sim_result.summary["completed"]
+    assert f'latency_e2e_s_bucket{{le="+Inf"}} {n}' in text
+
+
+def test_cli_subcommands(tmp_path, sim_result, live_result):
+    from repro.obs.__main__ import main
+
+    log = tmp_path / "events.jsonl"
+    other = tmp_path / "other.jsonl"
+    write_jsonl(log, sim_result.obs.events)
+    write_jsonl(other, live_result.obs.events)
+    first = min(e["msg_id"] for e in sim_result.obs.events
+                if e["ev"] == "msg.enqueued")
+    absent = max(e["msg_id"] for e in sim_result.obs.events
+                 if e["ev"] == "msg.enqueued") + 10_000
+    assert main(["schema-check", str(log)]) == 0
+    assert main(["latency", str(log), "--json"]) == 0
+    assert main(["trace", str(log), "--msg", str(first)]) == 0
+    assert main(["trace", str(log), "--msg", str(absent)]) == 1
+    assert main(["audit", str(log)]) == 0
+    assert main(["diff", str(log), str(other)]) == 0
+    assert main(["summary", str(log)]) == 0
+    # a log violating the manifest fails the check
+    bad = [dict(e) for e in sim_result.obs.events]
+    bad[0]["mystery"] = True
+    write_jsonl(log, bad)
+    assert main(["schema-check", str(log)]) == 1
+
+
+def test_cli_entrypoint_runs_as_module(tmp_path, sim_result):
+    log = tmp_path / "events.jsonl"
+    write_jsonl(log, sim_result.obs.events)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "summary", str(log)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["events"] == len(sim_result.obs.events)
+
+
+def test_summarize_counts_and_percentiles(sim_result):
+    s = summarize(sim_result.obs.events)
+    assert s["events"] == len(sim_result.obs.events)
+    assert s["counts"]["msg.completed"] == sim_result.summary["completed"]
+    assert s["e2e"]["p50"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Bus envelope
+# ---------------------------------------------------------------------------
+
+
+def test_bus_envelope_and_time_bases():
+    bus = EventBus()
+    bus.tick = 4.0
+    bus.emit("worker.active", worker=1)
+    bus.now = lambda: 4.7
+    bus.emit("worker.active", worker=2)
+    a, b = bus.events
+    assert (a["seq"], a["t"], a["tick"]) == (0, 4.0, 4.0)
+    assert (b["seq"], b["t"], b["tick"]) == (1, 4.7, 4.0)
+    with pytest.raises(ValueError):
+        EventBus(level="verbose")
