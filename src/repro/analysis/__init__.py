@@ -27,6 +27,14 @@ R5     determinism: no wall-clock reads, ambient RNG, or set-order
 R6     event schema: every ``bus.emit`` call site in ``src/`` matches the
        pinned field set in ``obs/event_manifest.json``, no manifest entry
        is stale, and every entry is exercised by the schema test
+R7     protocol model: the master↔worker state machines extracted from
+       the runtime's ASTs match ``protocol/protocol_manifest.json``, and
+       the committed machines pass an exhaustive bounded model check
+       (at-least-once delivery, no duplicate completion, kill-harvest
+       safety) over every interleaving with SIGKILL injection
+R8     trace conformance: recorded ``events.jsonl`` logs replay cleanly
+       against the protocol machines (only runs when ``--events`` paths
+       are given; CI feeds it the smoke runs' logs)
 =====  ====================================================================
 
 Run it with ``python -m repro.analysis`` (see ``__main__.py``).  The
@@ -44,6 +52,7 @@ from .rules_concurrency import check_affinity, check_blocking_in_async
 from .rules_contracts import check_frozen_reference, check_wire_contract
 from .rules_determinism import check_determinism
 from .rules_obs import check_event_schema
+from .protocol.rules import check_protocol_model, check_trace_conformance
 
 __all__ = [
     "RULES",
@@ -82,6 +91,14 @@ RULES: Dict[str, tuple] = {
         check_event_schema,
         "bus-emitted event types pinned in the event-schema manifest + tested",
     ),
+    "R7": (
+        check_protocol_model,
+        "protocol machines match the manifest and model-check clean",
+    ),
+    "R8": (
+        check_trace_conformance,
+        "recorded event logs replay cleanly against the protocol machines",
+    ),
 }
 
 
@@ -89,12 +106,17 @@ def run_analysis(
     root: Path,
     rules: Optional[Iterable[str]] = None,
     index: Optional[RepoIndex] = None,
+    events: Optional[Iterable[Path]] = None,
 ) -> List[Finding]:
     """Run the selected rules (default: all) over the tree at ``root``.
 
     Returns findings sorted by (rule, path, line).  Parse failures in any
     analyzed file are reported under the pseudo-rule ``parse`` regardless
     of the selection — an unparseable file is never a clean file.
+
+    ``events`` is R8's input: paths to ``events.jsonl`` files (or
+    directories holding them) to replay against the protocol machines.
+    With no paths, R8 is a clean no-op.
     """
     root = Path(root)
     if index is None:
@@ -104,7 +126,11 @@ def run_analysis(
     if unknown:
         raise ValueError(f"unknown rules {unknown}; available: {list(RULES)}")
     findings: List[Finding] = list(index.parse_findings)
+    event_paths = list(events) if events is not None else None
     for rule_id in selected:
         checker: Callable = RULES[rule_id][0]
-        findings.extend(checker(index, root))
+        if rule_id == "R8":
+            findings.extend(checker(index, root, event_paths))
+        else:
+            findings.extend(checker(index, root))
     return sorted(findings, key=lambda f: (f.rule, f.path, f.line, f.message))

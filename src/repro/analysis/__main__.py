@@ -8,14 +8,24 @@ Typical invocations::
     PYTHONPATH=src python -m repro.analysis                  # text report
     PYTHONPATH=src python -m repro.analysis --format json --out report.json
     PYTHONPATH=src python -m repro.analysis --rules R1,R2    # subset
+    PYTHONPATH=src python -m repro.analysis --changed-only   # pre-commit
+    PYTHONPATH=src python -m repro.analysis --rules R8 --events runs/obs
+
+``--changed-only [REF]`` keeps only findings in files changed vs REF
+(default HEAD: staged + unstaged + untracked) — the pre-commit fast
+path.  Rules still see the whole tree (cross-file invariants need it);
+only the *reporting* is filtered, and stale-suppression errors are not
+reported since unchanged files are out of scope.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
+from typing import Optional, Set
 
 from . import (
     DEFAULT_BASELINE_NAME,
@@ -38,12 +48,32 @@ def _find_root(start: Path) -> Path:
     )
 
 
+def _changed_files(root: Path, ref: str) -> Optional[Set[str]]:
+    """Repo-relative paths changed vs ``ref`` plus untracked files, or
+    None if git is unavailable / ``root`` is not a work tree."""
+    changed: Set[str] = set()
+    for cmd in (
+        ["git", "diff", "--name-only", ref, "--"],
+        ["git", "ls-files", "--others", "--exclude-standard"],
+    ):
+        try:
+            out = subprocess.run(
+                cmd, cwd=root, capture_output=True, text=True, check=True
+            ).stdout
+        except (OSError, subprocess.CalledProcessError):
+            return None
+        changed.update(line.strip() for line in out.splitlines()
+                       if line.strip())
+    return changed
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description=(
             "AST-based invariant checker: concurrency (R1, R2), frozen "
-            "reference (R3), wire contract (R4), determinism (R5)."
+            "reference (R3), wire contract (R4), determinism (R5), event "
+            "schema (R6), protocol model (R7), trace conformance (R8)."
         ),
     )
     parser.add_argument(
@@ -76,6 +106,24 @@ def main(argv=None) -> int:
         help=f"suppression file (default: <root>/{DEFAULT_BASELINE_NAME})",
     )
     parser.add_argument(
+        "--events",
+        type=Path,
+        action="append",
+        default=None,
+        metavar="PATH",
+        help="events.jsonl file or directory for R8 trace conformance "
+             "(repeatable; without it R8 is a no-op)",
+    )
+    parser.add_argument(
+        "--changed-only",
+        nargs="?",
+        const="HEAD",
+        default=None,
+        metavar="REF",
+        help="report only findings in files changed vs REF (default "
+             "HEAD) plus untracked files — the pre-commit fast path",
+    )
+    parser.add_argument(
         "--list-rules",
         action="store_true",
         help="print the rule catalogue and exit",
@@ -93,7 +141,7 @@ def main(argv=None) -> int:
         return 2
     rules = args.rules.split(",") if args.rules else None
     try:
-        findings = run_analysis(root, rules=rules)
+        findings = run_analysis(root, rules=rules, events=args.events)
     except ValueError as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2
@@ -101,12 +149,28 @@ def main(argv=None) -> int:
     suppressions = load_baseline(baseline_path)
     active, suppressed, stale = apply_baseline(findings, suppressions)
 
+    if args.changed_only is not None:
+        changed = _changed_files(root, args.changed_only)
+        if changed is None:
+            print(
+                f"error: --changed-only needs a git work tree at {root} "
+                f"and a resolvable ref {args.changed_only!r}",
+                file=sys.stderr,
+            )
+            return 2
+        active = [f for f in active if f.path in changed]
+        # unchanged files are out of scope, so a suppression pointing at
+        # one is not actionable here — full runs still report staleness
+        stale = []
+
     counts: dict = {}
     for f in active:
         counts[f.rule] = counts.get(f.rule, 0) + 1
+    # the report is machine-diffable across checkouts: every path in it,
+    # including the root itself, is repo-relative
     report = {
         "version": 1,
-        "root": str(root),
+        "root": ".",
         "rules": {rule_id: desc for rule_id, (_, desc) in RULES.items()},
         "findings": [f.to_json() for f in active],
         "suppressed": len(suppressed),

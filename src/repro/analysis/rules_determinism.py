@@ -1,4 +1,4 @@
-"""R5 — determinism lint over the ``core/`` simulation paths.
+"""R5 — determinism lint over ``core/``, ``runtime/``, and ``obs/``.
 
 The tick-for-tick equivalence suite (and every pinned scenario metric)
 assumes ``core.sim`` and ``core.sim_reference`` are pure functions of
@@ -18,9 +18,22 @@ that:
   must be sorted before iteration (dicts are insertion-ordered and
   fine).
 
-Scope: every file under ``src/repro/core/`` — the packers, profiler,
-predictor, IRM, both simulators, and the Spark baseline all sit on the
-equivalence-pinned path.
+Scope, per tree:
+
+- ``src/repro/core/`` — the packers, profiler, predictor, IRM, both
+  simulators, and the Spark baseline all sit on the equivalence-pinned
+  path.  **No exemptions**: results must be a pure function of
+  ``(stream, config, seed)``.
+- ``src/repro/runtime/`` and ``src/repro/obs/`` — decision logic here
+  must stay replayable from recorded event logs, so the same three
+  classes of construct are linted, with one carve-out: *measurement*
+  sites may read the wall clock.  A wall-clock call is exempt when it
+  sits inside a function annotated ``@worker_side`` or ``@loop_only``
+  (declared timing/measurement affinity) or inside an ``async def``
+  (driver plumbing, not decision logic), or anywhere in
+  ``runtime/clock.py`` — the one sanctioned wall-clock wrapper
+  (``ScaledClock``).  RNG and set-iteration checks get **no**
+  exemption anywhere.
 """
 
 from __future__ import annotations
@@ -28,11 +41,17 @@ from __future__ import annotations
 import ast
 from typing import List, Optional
 
-from .model import Finding, RepoIndex
+from .model import Finding, ModuleIndex, RepoIndex
 
 __all__ = ["check_determinism"]
 
 CORE_PREFIX = "src/repro/core/"
+#: trees where wall-clock reads are linted but annotated measurement
+#: sites (@worker_side / @loop_only / async def) are exempt
+REPLAY_PREFIXES = ("src/repro/runtime/", "src/repro/obs/")
+#: the sanctioned wall-clock wrapper — ScaledClock must read the host
+#: clock; everything else goes through it
+WALL_CLOCK_ALLOWED_MODULES = {"src/repro/runtime/clock.py"}
 
 _WALL_CLOCK = {
     "time.time",
@@ -72,10 +91,24 @@ def _is_set_expr(node: ast.expr) -> bool:
     return False
 
 
+def _wall_clock_exempt(mod: ModuleIndex, line: int) -> bool:
+    """True when ``line`` sits inside a declared measurement site: a
+    ``@worker_side`` / ``@loop_only`` function or an ``async def``."""
+    for fn in mod.functions:
+        end = getattr(fn.node, "end_lineno", fn.node.lineno)
+        if fn.node.lineno <= line <= end and (
+            fn.worker_side or fn.loop_only or fn.is_async
+        ):
+            return True
+    return False
+
+
 def check_determinism(index: RepoIndex, root) -> List[Finding]:
     findings: List[Finding] = []
     for mod in index.modules.values():
-        if not mod.path.startswith(CORE_PREFIX):
+        in_core = mod.path.startswith(CORE_PREFIX)
+        in_replay = mod.path.startswith(REPLAY_PREFIXES)
+        if not in_core and not in_replay:
             continue
         # does this module import the stdlib random module (and under
         # what name)?  numpy-as-np is assumed by repo convention.
@@ -89,19 +122,41 @@ def check_determinism(index: RepoIndex, root) -> List[Finding]:
             if isinstance(node, ast.Call):
                 dotted = _dotted(node.func)
                 if dotted in _WALL_CLOCK:
-                    findings.append(
-                        Finding(
-                            rule="R5",
-                            path=mod.path,
-                            line=node.lineno,
-                            symbol="",
-                            message=(
-                                f"wall-clock read {dotted}() on the sim path; "
-                                f"core/ results must be a pure function of "
-                                f"(stream, config, seed)"
-                            ),
+                    if in_replay:
+                        if (
+                            mod.path not in WALL_CLOCK_ALLOWED_MODULES
+                            and not _wall_clock_exempt(mod, node.lineno)
+                        ):
+                            findings.append(
+                                Finding(
+                                    rule="R5",
+                                    path=mod.path,
+                                    line=node.lineno,
+                                    symbol="",
+                                    message=(
+                                        f"wall-clock read {dotted}() in "
+                                        f"decision logic; route it through "
+                                        f"ScaledClock, or annotate the "
+                                        f"enclosing function @worker_side/"
+                                        f"@loop_only if this is a "
+                                        f"measurement site"
+                                    ),
+                                )
+                            )
+                    else:
+                        findings.append(
+                            Finding(
+                                rule="R5",
+                                path=mod.path,
+                                line=node.lineno,
+                                symbol="",
+                                message=(
+                                    f"wall-clock read {dotted}() on the sim path; "
+                                    f"core/ results must be a pure function of "
+                                    f"(stream, config, seed)"
+                                ),
+                            )
                         )
-                    )
                 elif dotted is not None:
                     head, _, rest = dotted.partition(".")
                     if head in random_aliases:

@@ -28,13 +28,22 @@ transport's kill path, whose synchronous data-channel tail-drain is
 exactly what makes a worker kill race-free.  The reason string is
 mandatory when the keyword is used (the checker rejects an empty one):
 an annotated blocking section must say why freezing the loop is safe.
+
+``@transition`` extends the vocabulary to the delivery protocol itself:
+it declares which entity state machine (message / worker slot / PE) a
+function advances, on which event, from which source states to which
+destination.  Rule R7 extracts these declarations, verifies each against
+AST evidence in the same function (a matching ``bus.emit`` literal or a
+``PEState``/``WorkerState`` mirror assignment), assembles the per-entity
+machines, and pins them in ``protocol_manifest.json`` — which the model
+checker explores and rule R8 replays against recorded event logs.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Optional, TypeVar, overload
 
-__all__ = ["loop_only", "worker_side"]
+__all__ = ["loop_only", "worker_side", "transition"]
 
 F = TypeVar("F", bound=Callable)
 
@@ -76,3 +85,51 @@ def worker_side(fn: F) -> F:
     """
     fn.__worker_side__ = True
     return fn
+
+
+def transition(
+    entity: str,
+    event: str,
+    src: str,
+    dst: str,
+    *,
+    failing: bool = False,
+    scope: Optional[str] = None,
+) -> Callable[[F], F]:
+    """Declare a protocol state-machine transition this function performs.
+
+    ``entity`` is ``"msg"``, ``"worker"``, or ``"pe"``; ``event`` is
+    either a pinned observability event type (contains a dot, e.g.
+    ``"msg.pulled"``) or an *internal* transition name without one (e.g.
+    ``"ready"`` — a state change that produces no event, used by the
+    trace-conformance replay as an ε-edge).  ``src`` lists the allowed
+    source states, ``|``-separated; ``dst`` is the single destination.
+
+    ``failing=True`` marks a failure edge: the replay treats the instance
+    as dead afterwards (a failed worker slot is never rebooted, so any
+    later event for it is a violation).  ``scope="worker"`` widens a PE
+    transition to every PE owned by the event's worker (a worker kill
+    stops all its PEs at once).
+
+    Identity decorator, stackable; rule R7 cross-checks each declaration
+    against AST evidence in the decorated function and fails on stale or
+    missing declarations, so the stack next to the code *is* the
+    committed protocol.
+    """
+
+    def mark(f: F) -> F:
+        declared = list(getattr(f, "__protocol_transitions__", ()))
+        declared.append(
+            {
+                "entity": entity,
+                "event": event,
+                "src": src.split("|"),
+                "dst": dst,
+                "failing": failing,
+                "scope": scope,
+            }
+        )
+        f.__protocol_transitions__ = declared
+        return f
+
+    return mark

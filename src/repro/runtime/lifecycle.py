@@ -29,7 +29,7 @@ from __future__ import annotations
 from typing import Set
 
 from ..core.sim import SimConfig
-from .annotations import loop_only
+from .annotations import loop_only, transition
 from .clock import ScaledClock
 from .worker import WorkerPool
 
@@ -55,6 +55,8 @@ class Lifecycle:
         self.nominal_t = 0.0
 
     @loop_only
+    @transition("worker", "worker.kill", src="booting|active", dst="off",
+                failing=True)
     def kill_worker(self, idx: int) -> int:
         """Inject a worker failure; returns how many messages requeued.
 

@@ -27,6 +27,7 @@ from itertools import islice
 from typing import Deque, Dict, List, Optional, Tuple
 
 from ..core.workloads import Message
+from .annotations import transition
 
 __all__ = ["Master"]
 
@@ -60,6 +61,7 @@ class Master:
             ev = self._events[image] = asyncio.Event()
         return ev
 
+    @transition("msg", "msg.enqueued", src="created", dst="enqueued")
     def push_back(self, m: Message) -> None:
         """Normal arrival: append in global FIFO order."""
         self._seq_back += 1
@@ -83,6 +85,7 @@ class Master:
         self._qlen += 1
         self._event(m.image).set()
 
+    @transition("msg", "msg.requeued", src="pulled|started", dst="requeued")
     def requeue(self, m: Message) -> None:
         """Return an in-flight message to the queue head (worker failure).
 

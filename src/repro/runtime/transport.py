@@ -63,7 +63,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ..core.sim import PEState, WorkerState
 from ..core.workloads import Message
-from .annotations import loop_only, worker_side
+from .annotations import loop_only, transition, worker_side
 
 __all__ = [
     "Transport",
@@ -151,6 +151,13 @@ class InProcTransport(Transport):
         pe.task.add_done_callback(self._tasks.discard)
 
     # ---- the PE loop (verbatim the pre-transport asyncio PE) --------------
+    @transition("pe", "ready", src="starting", dst="idle")
+    @transition("msg", "msg.pulled", src="enqueued|requeued", dst="pulled")
+    @transition("pe", "msg.pulled", src="idle", dst="busy")
+    @transition("msg", "msg.started", src="pulled", dst="started")
+    @transition("msg", "msg.completed", src="started", dst="completed")
+    @transition("pe", "msg.completed", src="busy", dst="idle")
+    @transition("pe", "pe.exit", src="idle", dst="stopped")
     async def _pe_main(self, worker, pe) -> None:
         pool = self.pool
         cfg = pool.cfg
@@ -219,6 +226,8 @@ class InProcTransport(Transport):
                 pool._pe_total -= 1
 
     @loop_only
+    @transition("pe", "worker.kill", src="starting|idle|busy", dst="stopped",
+                scope="worker")
     def kill_worker(self, worker) -> List[Message]:
         """Cancel the victim's PE tasks synchronously on the loop thread.
 
@@ -528,6 +537,8 @@ class MultiprocTransport(Transport):
             pass
 
     @loop_only
+    @transition("pe", "ready", src="starting", dst="idle")
+    @transition("pe", "pe.exit", src="idle", dst="stopped")
     def _handle_event(self, widx: int, h: _ProcHandle, ev: tuple) -> None:
         pool = self.pool
         tag = ev[0]
@@ -563,6 +574,9 @@ class MultiprocTransport(Transport):
                 pool._pe_total -= 1
 
     @loop_only
+    @transition("msg", "msg.pulled", src="enqueued|requeued", dst="pulled")
+    @transition("pe", "msg.pulled", src="idle", dst="busy")
+    @transition("msg", "msg.started", src="pulled", dst="started")
     def _on_pull(self, widx: int, h: _ProcHandle, pe) -> None:
         """The master side of a P2P pull: atomically peek the FIFO head,
         run the vector congestion gate against the mirror state, and ship
@@ -598,6 +612,8 @@ class MultiprocTransport(Transport):
         h.cmd_q.put_nowait((_CMD_REPLY, pe.uid, blob))
 
     @loop_only
+    @transition("msg", "msg.completed", src="started", dst="completed")
+    @transition("pe", "msg.completed", src="busy", dst="idle")
     def _on_complete(self, widx: int, h: _ProcHandle, pe, ev: tuple) -> None:
         _, _, blob, start_t, done_t, cpu_s, encode_ms, proc_cpu_s = ev
         pool = self.pool
@@ -677,6 +693,8 @@ class MultiprocTransport(Transport):
         "completion can race the harvest (the poller is parked, not a "
         "second consumer)"
     ))
+    @transition("pe", "worker.kill", src="starting|idle|busy", dst="stopped",
+                scope="worker")
     def kill_worker(self, worker) -> List[Message]:
         """SIGKILL the worker process, then settle the data channel.
 

@@ -41,7 +41,7 @@ from ..core.profiler import WorkerProbe
 from ..core.queues import HostRequest
 from ..core.sim import PEState, SimConfig, WorkerState
 from ..core.workloads import Message
-from .annotations import loop_only
+from .annotations import loop_only, transition
 from .clock import ScaledClock
 from .master import Master
 from .transport import InProcTransport, Transport
@@ -86,6 +86,7 @@ class LiveWorker:
 
     __slots__ = ("idx", "state", "ready_t", "pes", "probe")
 
+    @transition("worker", "ready", src="booting", dst="active")
     def __init__(self, idx: int, t: float, boot_delay: float):
         self.idx = idx
         self.state = (
@@ -138,6 +139,7 @@ class WorkerPool:
 
     # ---- lifecycle hooks (called by Lifecycle / the driver) ----------------
     @loop_only
+    @transition("worker", "worker.active", src="booting", dst="active")
     def promote_booted(self, t: float) -> None:
         """BOOTING → ACTIVE once the boot delay has elapsed."""
         if not self._booting:
@@ -169,6 +171,7 @@ class WorkerPool:
 
     # ---- scaling actuation (called by Lifecycle) ---------------------------
     @loop_only
+    @transition("worker", "worker.boot", src="created", dst="booting")
     def add_worker(self, t: float) -> LiveWorker:
         """Append a fresh worker slot and register it in the indices."""
         w = LiveWorker(len(self.workers), t, self.cfg.worker_boot_delay)
@@ -203,6 +206,7 @@ class WorkerPool:
         return None
 
     @loop_only
+    @transition("worker", "worker.boot", src="off", dst="booting")
     def reboot_slot(self, w: LiveWorker, ready_t: float) -> None:
         """OFF → BOOTING on a slot returned by ``lowest_off_slot``."""
         assert self._off_heap and self._off_heap[0] == w.idx
@@ -217,6 +221,7 @@ class WorkerPool:
         self.transport.start_worker(w)
 
     @loop_only
+    @transition("worker", "worker.deactivate", src="active", dst="off")
     def deactivate(self, w: LiveWorker) -> None:
         """ACTIVE → OFF (scale-down of an empty worker)."""
         w.state = WorkerState.OFF
@@ -228,6 +233,8 @@ class WorkerPool:
         self.transport.stop_worker(w)
 
     @loop_only
+    @transition("worker", "worker.kill", src="booting|active", dst="off",
+                failing=True)
     def kill_worker(self, idx: int) -> List[Message]:
         """Abruptly terminate a worker and harvest the messages it was
         processing.
@@ -261,6 +268,7 @@ class WorkerPool:
 
     # ---- placement actuation ----------------------------------------------
     @loop_only
+    @transition("pe", "pe.spawn", src="created", dst="starting")
     def try_start_pe(self, req: HostRequest) -> bool:
         """Start a PE on the placed worker; False while the VM still boots."""
         idx = req.target_worker

@@ -2,7 +2,8 @@
 
 Two halves:
 
-1. **Fixtures** — for each rule R1–R5, a minimal synthetic repo tree
+1. **Fixtures** — for each rule R1–R6, a minimal synthetic repo tree
+   (R7/R8 have their own fixture suite in ``test_protocol.py``)
    (written under ``tmp_path`` in the same ``src/repro/...`` layout the
    checker walks) containing exactly one violation, proving the rule
    *fires*.  A checker that silently stops matching would otherwise keep
@@ -252,6 +253,56 @@ def test_r5_fires_on_unseeded_rng_and_set_iteration(tmp_path):
     assert any("hash-order-dependent" in m for m in msgs)
 
 
+@pytest.mark.timeout(30)
+def test_r5_fires_on_wall_clock_in_runtime_decision_logic(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/runtime/policy.py": (
+            "import time\n"
+            "def decide():\n"
+            "    return time.time()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R5"]), "R5")
+    assert len(msgs) == 1
+    assert "ScaledClock" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_r5_exempts_annotated_measurement_sites_not_rng(tmp_path):
+    _write_tree(tmp_path, {
+        # the sanctioned wall-clock wrapper is allowlisted wholesale
+        "src/repro/runtime/clock.py": (
+            "import time\n"
+            "def now():\n"
+            "    return time.perf_counter()\n"
+        ),
+        # measurement affinity annotations and async drivers are exempt
+        "src/repro/runtime/meas.py": (
+            "import time\n"
+            "from .annotations import loop_only, worker_side\n"
+            "@worker_side\n"
+            "def grind():\n"
+            "    return time.perf_counter()\n"
+            "@loop_only\n"
+            "def poll():\n"
+            "    return time.monotonic()\n"
+            "async def drive():\n"
+            "    return time.time()\n"
+        ),
+        # RNG gets no exemption anywhere, even under annotations
+        "src/repro/obs/jitterbug.py": (
+            "import random\n"
+            "from repro.runtime.annotations import worker_side\n"
+            "@worker_side\n"
+            "def jitter():\n"
+            "    return random.random()\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R5"]), "R5")
+    assert len(msgs) == 1
+    assert "global RNG" in msgs[0]
+
+
 # ---------------------------------------------------------------------------
 # R6 — event-schema manifest
 # ---------------------------------------------------------------------------
@@ -421,3 +472,74 @@ def test_cli_exit_codes_and_json_report(tmp_path, capsys):
     assert report["findings"] == []
     assert analysis_main(["--list-rules"]) == 0
     capsys.readouterr()
+
+
+@pytest.mark.timeout(120)
+def test_json_report_is_repo_relative(tmp_path, capsys):
+    """The report must diff cleanly across checkouts: no absolute path
+    may appear anywhere in it, and the root is pinned to '.'."""
+    import json
+
+    out = tmp_path / "report.json"
+    rc = analysis_main([
+        "--root", str(REPO_ROOT), "--rules", "R3", "--format", "json",
+        "--out", str(out),
+    ])
+    capsys.readouterr()
+    assert rc == 0
+    text = out.read_text()
+    assert str(REPO_ROOT) not in text
+    assert json.loads(text)["root"] == "."
+
+
+def _git(cwd, *argv):
+    import subprocess
+
+    subprocess.run(
+        ["git", "-c", "user.email=t@example.com", "-c", "user.name=t",
+         *argv],
+        cwd=cwd, check=True, capture_output=True,
+    )
+
+
+@pytest.mark.timeout(60)
+def test_changed_only_reports_only_changed_files(tmp_path, capsys):
+    _write_tree(tmp_path, {
+        "src/repro/core/old.py": (
+            "import time\n"
+            "def a():\n"
+            "    return time.time()\n"
+        ),
+    })
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", ".")
+    _git(tmp_path, "commit", "-q", "-m", "seed")
+
+    # nothing changed vs HEAD → the committed violation is out of scope
+    rc = analysis_main(["--root", str(tmp_path), "--rules", "R5",
+                        "--changed-only"])
+    capsys.readouterr()
+    assert rc == 0
+
+    # an untracked file with a violation is in scope
+    _write_tree(tmp_path, {
+        "src/repro/core/new.py": (
+            "import time\n"
+            "def b():\n"
+            "    return time.time()\n"
+        ),
+    })
+    rc = analysis_main(["--root", str(tmp_path), "--rules", "R5",
+                        "--changed-only"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "new.py" in out and "old.py" not in out
+
+
+@pytest.mark.timeout(60)
+def test_changed_only_outside_a_git_repo_is_a_usage_error(tmp_path, capsys):
+    _write_tree(tmp_path, {"src/repro/core/mod.py": "x = 1\n"})
+    rc = analysis_main(["--root", str(tmp_path), "--rules", "R5",
+                        "--changed-only"])
+    capsys.readouterr()
+    assert rc == 2

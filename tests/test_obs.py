@@ -198,6 +198,26 @@ def test_fault_runs_cover_the_remaining_types(sim_fault, mp_fault):
     assert {"worker.kill", "msg.requeued", "worker.deactivate"} <= observed
 
 
+def test_event_logs_conform_to_the_protocol_machines(
+        sim_result, live_result, mp_result, sim_fault, mp_fault):
+    """The runtime half of rule R8: every backend's event log — clean
+    runs and mid-run-SIGKILL runs alike — replays against the protocol
+    state machines with zero happens-before violations."""
+    from repro.analysis.protocol import load_committed_manifest, replay_events
+
+    manifest = load_committed_manifest()
+    for name, res in (("sim", sim_result), ("live", live_result),
+                      ("multiproc", mp_result), ("sim+kill", sim_fault),
+                      ("multiproc+kill", mp_fault)):
+        summary = replay_events(res.obs.events, manifest)
+        assert summary.ok, (name, [str(v) for v in summary.violations])
+        assert summary.completed > 0, name
+    # the kill runs must actually exercise the requeue edge — otherwise
+    # this test would pass on a log that never saw a failure
+    assert replay_events(sim_fault.obs.events, manifest).requeued > 0
+    assert replay_events(mp_fault.obs.events, manifest).requeued > 0
+
+
 def test_manifest_matches_expected_types(sim_result, sim_fault):
     man = load_manifest()["events"]
     assert set(man) == set(EXPECTED_TYPES)

@@ -1,0 +1,493 @@
+"""The protocol model checker checks itself: extraction fixtures, the
+exhaustive bounded model check, seeded mutations, and trace replay.
+
+Four halves, mirroring the package:
+
+1. **Extraction (R7)** — synthetic ``src/repro/runtime/...`` trees prove
+   each extraction obligation fires (uncovered emit, stale declaration,
+   mirror assignment without a declaration, manifest drift) and that a
+   fully annotated tree extracts clean.
+2. **Model check** — the *committed* manifest explores clean over every
+   interleaving of the bounded configuration, and seeded mutations
+   (dropping the requeue edge; harvesting before the drain) provably
+   produce counterexample traces.  A model checker that stopped finding
+   bugs would otherwise keep reporting "verified" forever.
+3. **Conformance (R8)** — unit replays of synthetic event sequences
+   (legal, out-of-order, duplicate completion, post-kill activity,
+   in-flight at end-of-log) plus the CLI surfaces.
+4. **Robustness** — match statements, walrus operators, and unparsable
+   files never crash the analyzer; parse failures surface as findings
+   alongside every rule, R7/R8 included.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.model import RepoIndex
+from repro.analysis.protocol import (
+    BoundedConfig,
+    PROTOCOL_MANIFEST_PATH,
+    drop_transition,
+    explore,
+    extract_findings,
+    extract_protocol,
+    render_trace,
+    replay_events,
+)
+from repro.analysis.protocol.__main__ import main as protocol_main
+from repro.obs.__main__ import main as obs_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+COMMITTED = json.loads(
+    (REPO_ROOT / PROTOCOL_MANIFEST_PATH).read_text(encoding="utf-8")
+)
+
+
+def _write_tree(root: Path, files: dict) -> Path:
+    for rel, content in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content, encoding="utf-8")
+    return root
+
+
+def _messages(findings, rule="R7"):
+    return [f.message for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# Extraction (R7) fixtures
+# ---------------------------------------------------------------------------
+
+_FX_EVENTS = json.dumps({
+    "version": 1,
+    "events": {
+        "msg.enqueued": {"fields": ["msg_id"]},
+        "msg.requeued": {"fields": ["msg_id"]},
+    },
+})
+
+_FX_MASTER_CLEAN = (
+    "from .annotations import transition\n"
+    "\n"
+    '@transition("msg", "msg.enqueued", src="created", dst="enqueued")\n'
+    "def push_back(bus, m):\n"
+    '    bus.emit("msg.enqueued", msg_id=m.msg_id)\n'
+    "\n"
+    '@transition("msg", "msg.requeued", src="pulled", dst="requeued")\n'
+    "def requeue(bus, m):\n"
+    '    bus.emit("msg.requeued", msg_id=m.msg_id)\n'
+)
+
+
+def _extract(tmp_path):
+    index = RepoIndex(tmp_path)
+    return extract_protocol(index, tmp_path)
+
+
+@pytest.mark.timeout(30)
+def test_annotated_fixture_extracts_clean(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": _FX_MASTER_CLEAN,
+    })
+    manifest, findings = _extract(tmp_path)
+    assert _messages(findings) == []
+    msg = manifest["entities"]["msg"]
+    events = {t["event"] for t in msg["transitions"]}
+    assert events == {"msg.enqueued", "msg.requeued"}
+    assert msg["initial"] == "created" and msg["terminal"] == ["completed"]
+
+
+@pytest.mark.timeout(30)
+def test_uncovered_emit_is_a_finding(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": (
+            "def push_back(bus, m):\n"
+            '    bus.emit("msg.enqueued", msg_id=m.msg_id)\n'
+        ),
+    })
+    _, findings = _extract(tmp_path)
+    msgs = _messages(findings)
+    assert len(msgs) == 1
+    assert "not covered by a @transition" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_stale_declaration_without_evidence_is_a_finding(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": (
+            "from .annotations import transition\n"
+            '@transition("msg", "msg.requeued", src="pulled", dst="requeued")\n'
+            "def requeue(bus, m):\n"
+            "    pass\n"
+        ),
+    })
+    _, findings = _extract(tmp_path)
+    msgs = _messages(findings)
+    assert len(msgs) == 1
+    assert "stale @transition" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_unknown_event_and_entity_are_findings(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": (
+            "from .annotations import transition\n"
+            '@transition("msg", "msg.vanished", src="a", dst="b")\n'
+            "def a(bus, m):\n"
+            '    bus.emit("msg.vanished", msg_id=1)\n'
+            '@transition("ghost", "msg.enqueued", src="a", dst="b")\n'
+            "def b(bus, m):\n"
+            '    bus.emit("msg.enqueued", msg_id=1)\n'
+        ),
+    })
+    _, findings = _extract(tmp_path)
+    msgs = _messages(findings)
+    assert any("is not registered" in m for m in msgs)
+    assert any("entity 'ghost' is unknown" in m for m in msgs)
+
+
+@pytest.mark.timeout(30)
+def test_uncovered_mirror_assignment_is_a_finding(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/worker.py": (
+            "def harvest(slot):\n"
+            "    slot.state = WorkerState.OFF\n"
+        ),
+    })
+    _, findings = _extract(tmp_path)
+    msgs = _messages(findings)
+    assert len(msgs) == 1
+    assert "mirror assignment" in msgs[0] and "WorkerState.OFF" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_data_channel_read_outside_loop_only_is_a_finding(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/transport.py": (
+            "def steal(self):\n"
+            "    return self.data_q.get()\n"
+        ),
+    })
+    _, findings = _extract(tmp_path)
+    msgs = _messages(findings)
+    assert len(msgs) == 1
+    assert "single-consumer" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_drift_against_committed_manifest_is_a_finding(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": _FX_MASTER_CLEAN,
+    })
+    index = RepoIndex(tmp_path)
+    manifest, _ = extract_protocol(index, tmp_path)
+
+    # missing manifest first
+    msgs = _messages(extract_findings(index, tmp_path))
+    assert any("manifest is missing" in m for m in msgs)
+
+    # committed == extracted → clean
+    committed_file = tmp_path / PROTOCOL_MANIFEST_PATH
+    committed_file.parent.mkdir(parents=True, exist_ok=True)
+    committed_file.write_text(json.dumps(manifest), encoding="utf-8")
+    assert _messages(extract_findings(index, tmp_path)) == []
+
+    # tamper with a source-state set → drift
+    tampered = json.loads(json.dumps(manifest))
+    tampered["entities"]["msg"]["transitions"][0]["src"] = ["started"]
+    committed_file.write_text(json.dumps(tampered), encoding="utf-8")
+    msgs = _messages(extract_findings(index, tmp_path))
+    assert len(msgs) == 1 and "protocol drift" in msgs[0]
+
+
+@pytest.mark.timeout(120)
+def test_r7_real_tree_extracts_clean_and_matches_manifest():
+    findings = run_analysis(REPO_ROOT, rules=["R7"])
+    details = "\n".join(f"{f.path}:{f.line}: {f.message}" for f in findings)
+    assert findings == [], details
+
+
+# ---------------------------------------------------------------------------
+# The bounded model check
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_bounded_model_check_is_exhaustive_and_clean():
+    result = explore(COMMITTED, BoundedConfig())
+    assert result.ok, [v.message for v in result.violations]
+    # the default 2-worker x 1-PE x 3-message x 1-kill configuration is
+    # a real state space, not a trivially-empty walk
+    assert result.states > 1500
+    assert result.transitions > result.states
+
+
+@pytest.mark.timeout(120)
+def test_dropping_the_requeue_edge_produces_a_counterexample():
+    mutated = drop_transition(COMMITTED, "msg.requeued")
+    result = explore(mutated, BoundedConfig())
+    assert not result.ok
+    v = result.violations[0]
+    assert v.invariant == "I1"
+    assert "requeue" in v.message
+    assert len(v.trace) >= 2
+    rendered = render_trace(v)
+    assert "kill" in rendered and "I1" in rendered
+
+
+@pytest.mark.timeout(120)
+def test_unsafe_harvest_order_produces_a_race_counterexample():
+    result = explore(COMMITTED, BoundedConfig(), unsafe_harvest=True)
+    assert not result.ok
+    assert any(v.invariant == "I4" for v in result.violations)
+
+
+@pytest.mark.timeout(120)
+def test_mutated_manifest_fails_r7_through_run_analysis(tmp_path):
+    """End to end: a committed manifest whose requeue edge is gone is
+    caught by rule R7 as a model-check finding with a trace."""
+    import shutil
+
+    for rel in ("src/repro/runtime/master.py",
+                "src/repro/runtime/worker.py",
+                "src/repro/runtime/lifecycle.py",
+                "src/repro/runtime/transport.py",
+                "src/repro/runtime/annotations.py",
+                "src/repro/core/sim.py",
+                "src/repro/obs/event_manifest.json"):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO_ROOT / rel, dst)
+    mutated = drop_transition(COMMITTED, "msg.requeued")
+    committed_file = tmp_path / PROTOCOL_MANIFEST_PATH
+    committed_file.parent.mkdir(parents=True, exist_ok=True)
+    committed_file.write_text(json.dumps(mutated), encoding="utf-8")
+
+    findings = _messages(run_analysis(tmp_path, rules=["R7"]))
+    assert any("model-check violation [I1]" in m for m in findings)
+    # the extracted machines also drifted from the mutated manifest
+    assert any("protocol drift" in m for m in findings)
+
+
+# ---------------------------------------------------------------------------
+# Trace conformance (R8)
+# ---------------------------------------------------------------------------
+
+
+def _ev(ev, seq, **fields):
+    return {"ev": ev, "seq": seq, "t": float(seq), **fields}
+
+
+def _legal_sequence():
+    return [
+        _ev("worker.boot", 0, worker=0),
+        _ev("worker.active", 1, worker=0),
+        _ev("pe.spawn", 2, worker=0, pe=0),
+        _ev("msg.enqueued", 3, msg_id=0),
+        # no explicit PE-ready event: the replay must promote the PE
+        # starting→idle over the internal ε-edge before idle→busy
+        _ev("msg.pulled", 4, msg_id=0, worker=0, pe=0),
+        _ev("msg.started", 5, msg_id=0, worker=0, pe=0),
+        _ev("msg.completed", 6, msg_id=0, worker=0, pe=0),
+        _ev("pe.exit", 7, worker=0, pe=0),
+        _ev("worker.deactivate", 8, worker=0),
+    ]
+
+
+@pytest.mark.timeout(30)
+def test_replay_accepts_a_legal_sequence_with_epsilon_promotion():
+    summary = replay_events(_legal_sequence(), COMMITTED)
+    assert summary.ok, [str(v) for v in summary.violations]
+    assert summary.completed == 1 and summary.backlog == 0
+
+
+@pytest.mark.timeout(30)
+def test_replay_flags_pull_without_enqueue():
+    events = [
+        _ev("worker.boot", 0, worker=0),
+        _ev("worker.active", 1, worker=0),
+        _ev("pe.spawn", 2, worker=0, pe=0),
+        _ev("msg.pulled", 3, msg_id=7, worker=0, pe=0),
+    ]
+    summary = replay_events(events, COMMITTED, strict_end=False)
+    assert any(
+        v.entity == "msg" and "illegal from state 'created'" in v.message
+        for v in summary.violations
+    )
+
+
+@pytest.mark.timeout(30)
+def test_replay_flags_duplicate_completion():
+    events = _legal_sequence()
+    events.insert(7, _ev("msg.completed", 99, msg_id=0, worker=0, pe=0))
+    summary = replay_events(events, COMMITTED, strict_end=False)
+    assert any("duplicate completion" in v.message
+               for v in summary.violations)
+
+
+@pytest.mark.timeout(30)
+def test_replay_flags_activity_after_a_kill():
+    events = [
+        _ev("worker.boot", 0, worker=0),
+        _ev("worker.active", 1, worker=0),
+        _ev("pe.spawn", 2, worker=0, pe=0),
+        _ev("msg.enqueued", 3, msg_id=0),
+        _ev("msg.pulled", 4, msg_id=0, worker=0, pe=0),
+        _ev("worker.kill", 5, worker=0),
+        _ev("msg.requeued", 6, msg_id=0),
+        # a SIGKILLed slot must never produce further events
+        _ev("worker.active", 7, worker=0),
+    ]
+    summary = replay_events(events, COMMITTED, strict_end=False)
+    assert any(
+        v.entity == "worker" and "failed worker instance" in v.message
+        for v in summary.violations
+    )
+    # requeued-at-end is backlog, not a violation
+    strict = replay_events(events[:-1], COMMITTED)
+    assert strict.ok and strict.backlog == 1 and strict.requeued == 1
+
+
+@pytest.mark.timeout(30)
+def test_replay_flags_in_flight_message_at_end_of_log():
+    events = [
+        _ev("worker.boot", 0, worker=0),
+        _ev("worker.active", 1, worker=0),
+        _ev("pe.spawn", 2, worker=0, pe=0),
+        _ev("msg.enqueued", 3, msg_id=0),
+        _ev("msg.pulled", 4, msg_id=0, worker=0, pe=0),
+    ]
+    summary = replay_events(events, COMMITTED)
+    assert any("delivery lost" in v.message for v in summary.violations)
+    # lenient end: truncated logs are allowed to stop mid-flight
+    assert replay_events(events, COMMITTED, strict_end=False).ok
+
+
+@pytest.mark.timeout(30)
+def test_r8_through_run_analysis(tmp_path):
+    good = tmp_path / "good" / "events.jsonl"
+    good.parent.mkdir(parents=True)
+    good.write_text(
+        "\n".join(json.dumps(e) for e in _legal_sequence()) + "\n",
+        encoding="utf-8",
+    )
+    bad = tmp_path / "bad" / "events.jsonl"
+    bad.parent.mkdir(parents=True)
+    events = _legal_sequence()
+    events.insert(7, _ev("msg.completed", 99, msg_id=0, worker=0, pe=0))
+    bad.write_text(
+        "not json at all\n"
+        + "\n".join(json.dumps(e) for e in events) + "\n",
+        encoding="utf-8",
+    )
+
+    # R8 without logs is a clean no-op
+    assert run_analysis(REPO_ROOT, rules=["R8"]) == []
+    assert run_analysis(REPO_ROOT, rules=["R8"],
+                        events=[good.parent]) == []
+    msgs = _messages(
+        run_analysis(REPO_ROOT, rules=["R8"], events=[tmp_path]), "R8"
+    )
+    assert any("duplicate completion" in m for m in msgs)
+    assert any("not valid JSON" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# CLI surfaces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(120)
+def test_protocol_cli_extract_and_check(capsys):
+    assert protocol_main(
+        ["--root", str(REPO_ROOT), "extract", "--diff"]) == 0
+    assert protocol_main(["--root", str(REPO_ROOT), "check"]) == 0
+    out = capsys.readouterr().out
+    assert "all delivery invariants hold" in out
+
+    rc = protocol_main(
+        ["--root", str(REPO_ROOT), "check", "--mutate", "msg.requeued"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[I1]" in out and "counterexample" in out
+
+
+@pytest.mark.timeout(30)
+def test_protocol_and_obs_conformance_clis(tmp_path, capsys):
+    log = tmp_path / "events.jsonl"
+    log.write_text(
+        "\n".join(json.dumps(e) for e in _legal_sequence()) + "\n",
+        encoding="utf-8",
+    )
+    assert protocol_main(
+        ["--root", str(REPO_ROOT), "conformance", str(tmp_path)]) == 0
+    capsys.readouterr()
+    assert obs_main(["conformance", str(log)]) == 0
+    assert "0 violation(s)" in capsys.readouterr().out
+
+    events = _legal_sequence()[:-4]  # ends with msg still started
+    log.write_text(
+        "\n".join(json.dumps(e) for e in events) + "\n", encoding="utf-8")
+    assert obs_main(["conformance", str(log)]) == 1
+    capsys.readouterr()
+    assert obs_main(["conformance", "--lenient-end", str(log)]) == 0
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# Robustness: modern syntax and unparsable files
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(30)
+def test_match_and_walrus_syntax_are_analyzed_not_skipped(tmp_path):
+    _write_tree(tmp_path, {
+        "src/repro/core/modern.py": (
+            "import time\n"
+            "def f(x):\n"
+            "    match x:\n"
+            "        case 1:\n"
+            "            if (y := time.time()):\n"
+            "                return y\n"
+            "        case _:\n"
+            "            return 0\n"
+        ),
+    })
+    msgs = _messages(run_analysis(tmp_path, rules=["R5"]), "R5")
+    assert len(msgs) == 1 and "wall-clock" in msgs[0]
+
+
+@pytest.mark.timeout(30)
+def test_unparsable_protocol_module_surfaces_for_r7_and_r8(tmp_path):
+    import shutil
+
+    _write_tree(tmp_path, {
+        "src/repro/obs/event_manifest.json": _FX_EVENTS,
+        "src/repro/runtime/master.py": "def oops(:\n",
+    })
+    committed_file = tmp_path / PROTOCOL_MANIFEST_PATH
+    committed_file.parent.mkdir(parents=True, exist_ok=True)
+    shutil.copy(REPO_ROOT / PROTOCOL_MANIFEST_PATH, committed_file)
+
+    log = tmp_path / "events.jsonl"
+    log.write_text(
+        "\n".join(json.dumps(e) for e in _legal_sequence()) + "\n",
+        encoding="utf-8",
+    )
+    for rules in (["R7"], ["R8"]):
+        found = run_analysis(tmp_path, rules=rules, events=[log])
+        assert any(
+            f.rule == "parse" and f.path == "src/repro/runtime/master.py"
+            for f in found
+        ), f"parse failure invisible under rules={rules}"
